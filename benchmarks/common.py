@@ -1,0 +1,56 @@
+"""Shared benchmark utilities: datasets, timing, method construction."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+import functools
+
+from repro.core import ABLATIONS, build, query, SCConfig
+
+#: jit-compiled query with the index as a traced argument (no constant
+#: folding of the corpus into the executable)
+jitted_query = jax.jit(query, static_argnames=("cfg",))
+from repro.data import gmm_dataset, make_queries
+from repro.utils import exact_knn
+
+DEFAULT_N = 30000
+DEFAULT_D = 96
+DEFAULT_Q = 100
+
+
+def bench_dataset(n=DEFAULT_N, d=DEFAULT_D, n_queries=DEFAULT_Q, seed=0):
+    data0 = gmm_dataset(n + n_queries, d, seed=seed)
+    data, queries = make_queries(data0, n_queries)
+    gt_d, gt_i = exact_knn(data, queries, 100)
+    return data, queries, gt_i, gt_d
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def build_method(name: str, data, **cfg_kw) -> tuple:
+    """(index, cfg, build_seconds)"""
+    cfg = ABLATIONS[name](**cfg_kw)
+    t0 = time.perf_counter()
+    idx = build(data, cfg)
+    jax.block_until_ready(idx.data)
+    return idx, cfg, time.perf_counter() - t0
+
+
+def emit(rows: list[tuple], header=("name", "us_per_call", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

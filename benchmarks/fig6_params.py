@@ -1,0 +1,32 @@
+"""Paper Fig. 6: TaCo parameter study — indexing/query performance vs the
+number of subspaces N_s and subspace dimensionality s."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_dataset, build_method, emit, time_call, jitted_query
+from repro.utils import recall_at_k
+
+
+def run(n=20000, d=96):
+    data, queries, gt_i, _ = bench_dataset(n=n, d=d, n_queries=50)
+    rows = []
+    for n_s in (4, 6, 8):
+        idx, cfg, bt = build_method("taco", data, n_subspaces=n_s, subspace_dim=8,
+                                    n_clusters=1024, alpha=0.05, beta=0.02, k=10)
+        t = time_call(lambda q: jitted_query(idx, q, cfg), queries)
+        r = recall_at_k(np.asarray(jitted_query(idx, queries, cfg)[0]), gt_i, 10)
+        rows.append((f"fig6/Ns={n_s}_query", round(t, 1),
+                     f"recall={r:.4f};build_s={bt:.2f};index_mb={idx.index_bytes/1e6:.1f}"))
+    for s in (6, 8, 10):
+        idx, cfg, bt = build_method("taco", data, n_subspaces=6, subspace_dim=s,
+                                    n_clusters=1024, alpha=0.05, beta=0.02, k=10)
+        t = time_call(lambda q: jitted_query(idx, q, cfg), queries)
+        r = recall_at_k(np.asarray(jitted_query(idx, queries, cfg)[0]), gt_i, 10)
+        rows.append((f"fig6/s={s}_query", round(t, 1),
+                     f"recall={r:.4f};build_s={bt:.2f};dim_reduction={1 - 6 * s / d:.2%}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Fig. 9: stability of recall across k in {1..100} for TaCo vs SuCo."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_dataset, build_method, emit, jitted_query
+from repro.core import ABLATIONS, build
+from repro.utils import recall_at_k
+import dataclasses
+
+
+def run(n=20000, d=96):
+    data, queries, gt_i, _ = bench_dataset(n=n, d=d, n_queries=50)
+    rows = []
+    for name in ("taco", "suco"):
+        idx, cfg, _bt = build_method(name, data, n_subspaces=6, subspace_dim=8,
+                                     n_clusters=1024, alpha=0.05, beta=0.02, k=100)
+        for k in (1, 10, 50, 100):
+            cfg_k = dataclasses.replace(cfg, k=k)
+            ids, _ = jitted_query(idx, queries, cfg_k)
+            r = recall_at_k(np.asarray(ids), gt_i, k)
+            rows.append((f"fig9/{name}_k={k}", k, f"recall={r:.4f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

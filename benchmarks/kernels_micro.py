@@ -1,0 +1,39 @@
+"""Kernel-path microbenchmarks: the fused jnp/XLA hot loops that the Pallas
+kernels replace on TPU (interpret mode is a correctness tool; CPU timings
+here track the oracle path so regressions in the query hot loop show up)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.kernels import ref
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    q = jnp.asarray(rng.standard_normal((100, 8)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((512, 8)), jnp.float32)
+    rows.append(("kernels/l2dist_100x512x8",
+                 round(time_call(jax.jit(ref.l2dist_ref), q, c), 1), "jnp_oracle"))
+
+    x = jnp.asarray(rng.standard_normal((100000, 8)), jnp.float32)
+    rows.append(("kernels/kmeans_assign_100k_x512",
+                 round(time_call(jax.jit(ref.kmeans_assign_ref), x, c), 1), "jnp_oracle"))
+
+    n_sub, nq, sk, n = 6, 100, 32, 100000
+    d1 = jnp.asarray(rng.uniform(0, 4, (n_sub, nq, sk)), jnp.float32)
+    d2 = jnp.asarray(rng.uniform(0, 4, (n_sub, nq, sk)), jnp.float32)
+    a1 = jnp.asarray(rng.integers(0, sk, (n_sub, n)), jnp.int32)
+    a2 = jnp.asarray(rng.integers(0, sk, (n_sub, n)), jnp.int32)
+    taus = jnp.asarray(rng.uniform(2, 5, (n_sub, nq)), jnp.float32)
+    rows.append(("kernels/scscore_6x100x100k",
+                 round(time_call(jax.jit(ref.scscore_ref), d1, d2, a1, a2, taus), 1),
+                 "jnp_oracle"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,131 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms per
+(arch x shape x mesh) from the dry-run artifacts and identify the dominant
+bottleneck per cell.
+
+Terms (v5e): compute = FLOPs_dev / 197e12, memory = bytes_dev / 819e9,
+collective = coll_bytes_dev / 50e9 (per-link). FLOPs/bytes are the
+loop-corrected structural HLO numbers (launch/hlo_analysis.py) — XLA's own
+cost_analysis undercounts scan bodies and is recorded alongside for
+reference. MODEL_FLOPS = 6*N*D (train) / 2*N_active*D_new (decode,
+forward-only convention, DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_arch
+from repro.configs.shapes import resolve_arch_for_shape
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def active_params(arch) -> int:
+    """Parameters touched per token (MoE: k/E of expert params + rest)."""
+    total = _analytic_params(arch)
+    if not arch.n_experts:
+        return total
+    moe_layers = arch.n_layers // arch.moe_every
+    expert_p = moe_layers * arch.n_experts * 3 * arch.d_model * arch.d_ff
+    active_expert = expert_p * arch.experts_per_token / arch.n_experts
+    return int(total - expert_p + active_expert)
+
+
+def _analytic_params(arch) -> int:
+    import jax
+    from repro.models.model import init_params
+
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), arch))
+    return int(sum(x.size for x in jax.tree_util.tree_leaves(shapes)))
+
+
+def model_flops(arch_name: str, shape_name: str) -> float:
+    shape = SHAPES[shape_name]
+    arch = resolve_arch_for_shape(get_arch(arch_name), shape)
+    n_act = active_params(arch)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * d
+    d = shape.global_batch  # one new token per sequence
+    return 2.0 * n_act * d
+
+
+def load_artifacts(art_dir: str = ARTIFACT_DIR) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def roofline_row(art: dict) -> dict | None:
+    if "hlo_analysis" not in art:
+        return None
+    h = art["hlo_analysis"]
+    n_dev = art["n_devices"]
+    compute = h["flops"] / PEAK_FLOPS
+    memory = h["bytes"] / HBM_BW
+    coll = h["collective_total"] / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(art["arch"], art["shape"])
+    hlo_total = h["flops"] * n_dev
+    return {
+        "arch": art["arch"],
+        "shape": art["shape"],
+        "mesh": art["mesh"],
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else float("nan"),
+        "roofline_fraction": compute / max(compute, memory, coll),
+        "step_s_bound": max(compute, memory, coll),
+        "optimizer": art.get("optimizer", ""),
+    }
+
+
+def run(art_dir: str = ARTIFACT_DIR):
+    rows = []
+    print("name,us_per_call,derived")
+    for art in load_artifacts(art_dir):
+        r = roofline_row(art)
+        if r is None:
+            continue
+        rows.append(r)
+        name = f"roofline/{r['arch']}__{r['shape']}__{r['mesh']}"
+        print(
+            f"{name},{r['step_s_bound'] * 1e6:.0f},"
+            f"compute={r['compute_s']:.4f}s;memory={r['memory_s']:.4f}s;"
+            f"collective={r['collective_s']:.4f}s;dominant={r['dominant']};"
+            f"useful_ratio={r['useful_ratio']:.3f};"
+            f"roofline_frac={r['roofline_fraction']:.3f}"
+        )
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute(s) | memory(s) | collective(s) "
+           "| dominant | MODEL/HLO | roofline frac |\n|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.3f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV per row (see each module)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated module names")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig1_pareto,
+        fig5_activation,
+        fig6_params,
+        fig7_indexing,
+        fig8_query,
+        fig9_k,
+        fig10_cross,
+        kernels_micro,
+        roofline,
+        table2_sclinear,
+    )
+
+    modules = {
+        "kernels_micro": kernels_micro,
+        "fig1_pareto": fig1_pareto,
+        "table2_sclinear": table2_sclinear,
+        "fig5_activation": fig5_activation,
+        "fig6_params": fig6_params,
+        "fig7_indexing": fig7_indexing,
+        "fig8_query": fig8_query,
+        "fig9_k": fig9_k,
+        "fig10_cross": fig10_cross,
+        "roofline": roofline,
+    }
+    chosen = args.only.split(",") if args.only else list(modules)
+    failures = 0
+    for name in chosen:
+        mod = modules[name.strip()]
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod.run()
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper Table 2: TaCo vs SC-Linear — query time, speedup, recall
+(same protocol: alpha=0.05, beta=0.005-scaled, k=10)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_dataset, build_method, emit, time_call, jitted_query
+from repro.core import SCLinear, suco_config
+from repro.utils import recall_at_k
+
+
+def run(n=30000, d=96):
+    data, queries, gt_i, _ = bench_dataset(n=n, d=d)
+    k = 10
+    # SC-Linear (no index)
+    cfgL = suco_config(n_subspaces=6, subspace_dim=8, alpha=0.05, beta=0.01, k=k)
+    scl = SCLinear(data, cfgL)
+    t_lin = time_call(scl.query, queries)
+    ids_l, _ = scl.query(queries)
+    r_lin = recall_at_k(np.asarray(ids_l), gt_i, k)
+
+    idx, cfg, _bt = build_method("taco", data, n_subspaces=6, subspace_dim=8,
+                                 n_clusters=1024, alpha=0.05, beta=0.01, k=k)
+    qfn = lambda q: jitted_query(idx, q, cfg)
+    t_taco = time_call(qfn, queries)
+    ids_t, _ = qfn(queries)
+    r_taco = recall_at_k(np.asarray(ids_t), gt_i, k)
+
+    rows = [
+        ("table2/sclinear_query", round(t_lin, 1), f"recall={r_lin:.4f}"),
+        ("table2/taco_query", round(t_taco, 1),
+         f"recall={r_taco:.4f};speedup={t_lin / t_taco:.1f}x"),
+    ]
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Compare the whole subspace-collision family + baselines on one dataset:
+TaCo vs SuCo / SuCo-DT / SuCo-CS / SuCo-QS vs SC-Linear vs IVF-Flat.
+
+    PYTHONPATH=src:. python examples/ann_search.py [--n 30000] [--d 96]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (
+    ABLATIONS, SCLinear, build, build_ivf, ivf_query, query, suco_config,
+)
+from repro.data import gmm_dataset, make_queries
+from repro.utils import exact_knn, recall_at_k
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=30000)
+    ap.add_argument("--d", type=int, default=96)
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args()
+
+    data, queries = make_queries(gmm_dataset(args.n, args.d, seed=0), 100)
+    gt_d, gt_i = exact_knn(data, queries, args.k)
+    print(f"{'method':12s} {'build(s)':>9s} {'index(MB)':>10s} {'query(ms)':>10s} {'QPS':>8s} {'recall':>8s}")
+
+    def report(name, bt, mb, qt, rec):
+        qps = queries.shape[0] / qt
+        print(f"{name:12s} {bt:9.2f} {mb:10.2f} {qt * 1e3:10.1f} {qps:8.0f} {rec:8.4f}")
+
+    for name in ("taco", "suco", "suco-dt", "suco-cs", "suco-qs"):
+        cfg = ABLATIONS[name](n_subspaces=6, subspace_dim=8, n_clusters=1024,
+                              alpha=0.05, beta=0.02, k=args.k)
+        t0 = time.perf_counter(); idx = build(data, cfg); jax.block_until_ready(idx.data); bt = time.perf_counter() - t0
+        jax.block_until_ready(query(idx, queries, cfg))  # warm
+        t0 = time.perf_counter(); ids, _ = jax.block_until_ready(query(idx, queries, cfg)); qt = time.perf_counter() - t0
+        report(name, bt, idx.index_bytes / 1e6, qt, recall_at_k(np.asarray(ids), gt_i, args.k))
+
+    cfgL = suco_config(n_subspaces=6, subspace_dim=8, alpha=0.05, beta=0.02, k=args.k)
+    scl = SCLinear(data, cfgL)
+    jax.block_until_ready(scl.query(queries))  # warm
+    t0 = time.perf_counter(); ids, _ = jax.block_until_ready(scl.query(queries)); qt = time.perf_counter() - t0
+    report("sc-linear", 0.0, 0.0, qt, recall_at_k(np.asarray(ids), gt_i, args.k))
+
+    t0 = time.perf_counter(); ivf = build_ivf(data, 256); jax.block_until_ready(ivf.lists); bt = time.perf_counter() - t0
+    jax.block_until_ready(ivf_query(ivf, queries, 16, args.k))  # warm
+    t0 = time.perf_counter(); ids, _ = jax.block_until_ready(ivf_query(ivf, queries, 16, args.k)); qt = time.perf_counter() - t0
+    report("ivf-flat", bt, ivf.index_bytes / 1e6, qt, recall_at_k(np.asarray(ids), gt_i, args.k))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""End-to-end serving driver (the paper's flagship application, §5.4.3):
+serve a small LM with batched requests where long-context decode attention
+retrieves keys via TaCo instead of attending to the full KV cache.
+
+Runs entirely on CPU with a reduced model; the identical code path lowers
+for the production mesh (launch/dryrun.py long_500k cells).
+
+    PYTHONPATH=src:. python examples/retrieval_attention_serve.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models.model import decode_step, init_params, prefill
+from repro.models.taco_attention import RetrievalConfig
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    base = get_smoke("llava-next-mistral-7b")
+    base = dataclasses.replace(base, frontend=None)  # text-only serving here
+    params = init_params(jax.random.PRNGKey(0), base)
+    rng = np.random.default_rng(0)
+
+    # ---- 1. batched serving with full attention (engine baseline)
+    engine = ServingEngine(params, base, max_seq=256, batch_slots=4)
+    reqs = [Request(prompt=rng.integers(0, base.vocab_size, 12).tolist(),
+                    max_new_tokens=8) for _ in range(8)]
+    t0 = time.time()
+    outs = engine.generate(reqs)
+    print(f"[engine/full-attn] served {len(reqs)} reqs, "
+          f"{sum(map(len, outs))} tokens in {time.time() - t0:.1f}s")
+
+    # ---- 2. long-context decode: TaCo retrieval attention vs full attention
+    # NOTE: random (untrained) weights are the WORST case for sparse
+    # attention — attention is near-uniform, so no small key subset carries
+    # the mass. Trained models concentrate attention (the premise of
+    # RetrievalAttention/PQCache, paper §5.4.3); the framework's exactness
+    # property (retrieve-all == full attention) is asserted in
+    # tests/test_models.py. Here we teacher-force the same continuation
+    # through both paths and report per-step distribution distance.
+    ctx = 192
+    prompt = rng.integers(0, base.vocab_size, ctx + 16).tolist()
+    rcfg = RetrievalConfig(n_subspaces=2, subspace_dim=4, sqrt_k=8,
+                           alpha=0.2, n_retrieve=96, recent_window=32,
+                           kmeans_iters=3)
+    cfg_full = dataclasses.replace(base, attention_kind="full")
+    cfg_taco = dataclasses.replace(base, attention_kind="taco", retrieval=rcfg)
+
+    toks = jnp.asarray([prompt], jnp.int32)
+    logits, caches, steps = {}, {}, {}
+    for label, cfg in (("full", cfg_full), ("taco", cfg_taco)):
+        t0 = time.time()
+        logits[label], caches[label] = jax.jit(
+            lambda p, t, c=cfg: prefill(p, c, {"tokens": t}, 256)
+        )(params, toks[:, :ctx])
+        steps[label] = jax.jit(lambda p, c, t, pos, cc=cfg: decode_step(p, cc, c, t, pos))
+        print(f"[prefill/{label}] {ctx} tokens in {time.time() - t0:.1f}s")
+
+    agree, tvds = 0, []
+    for i in range(16):
+        tok = toks[:, ctx + i : ctx + i + 1]
+        lf, caches["full"] = steps["full"](params, caches["full"], tok, ctx + i)
+        lt, caches["taco"] = steps["taco"](params, caches["taco"], tok, ctx + i)
+        pf, pt = jax.nn.softmax(lf[:, 0]), jax.nn.softmax(lt[:, 0])
+        tvds.append(float(0.5 * jnp.sum(jnp.abs(pf - pt))))
+        agree += int(jnp.argmax(lf) == jnp.argmax(lt))
+    import numpy as _np
+
+    print(f"[decode] taco retrieval attends {rcfg.n_retrieve}/{ctx}+ keys "
+          f"({rcfg.n_retrieve / ctx:.0%} of cache)")
+    print(f"teacher-forced agreement full vs taco: argmax {agree}/16, "
+          f"mean TVD {_np.mean(tvds):.3f} (random-weight worst case; "
+          f"exactness at retrieve-all is test-asserted)")
+
+
+if __name__ == "__main__":
+    main()

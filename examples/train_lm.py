@@ -1,0 +1,32 @@
+"""Train a small LM for a few hundred steps with the full production stack:
+AdamW + warmup-cosine, grad clipping, microbatching, async atomic
+checkpoints, deterministic resumable data. Thin wrapper over launch/train.py
+(the same driver that lowers for the production mesh).
+
+    PYTHONPATH=src:. python examples/train_lm.py [--steps 300]
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    losses = train_main([
+        "--arch", args.arch, "--smoke",
+        "--steps", str(args.steps),
+        "--batch-size", "8", "--seq-len", "128",
+        "--lr", "1e-3", "--microbatches", "2",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+        "--log-every", "20",
+    ])
+    assert losses[-1] < losses[0], "loss did not improve"
+    print(f"loss improved {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

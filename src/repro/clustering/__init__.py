@@ -1,0 +1,3 @@
+from repro.clustering.kmeans import kmeans, kmeans_assign, lloyd_step
+
+__all__ = ["kmeans", "kmeans_assign", "lloyd_step"]

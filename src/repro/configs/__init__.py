@@ -1,0 +1,4 @@
+from repro.configs.registry import ARCHS, get_arch, get_smoke
+from repro.configs.shapes import SHAPES, input_specs, skip_reason
+
+__all__ = ["ARCHS", "SHAPES", "get_arch", "get_smoke", "input_specs", "skip_reason"]

@@ -1,0 +1,101 @@
+"""Assigned input shapes (4 per arch) and ShapeDtypeStruct input specs.
+
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill lowering
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524,288 global_batch 1     -> serve_step, TaCo retrieval
+                                                 attention for attention
+                                                 archs; native for SSM/hybrid
+
+Skips (DESIGN.md §Arch-applicability):
+  * whisper-medium x long_500k — pure full-attention enc-dec with bounded
+    decode length; every other arch runs all four shapes (attention archs run
+    long_500k via the paper's technique).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ArchConfig, init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    taco_attention: bool = False
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1, taco_attention=True),
+}
+
+
+def skip_reason(arch: ArchConfig, shape: ShapeSpec) -> str | None:
+    """Return a reason string if this (arch, shape) cell is skipped."""
+    if shape.name == "long_500k" and arch.family == "audio":
+        return (
+            "whisper-medium is a pure full-attention enc-dec with an "
+            "architecturally bounded decode length; long_500k skipped "
+            "(DESIGN.md §Arch-applicability)"
+        )
+    return None
+
+
+def resolve_arch_for_shape(arch: ArchConfig, shape: ShapeSpec) -> ArchConfig:
+    """Per-cell config adjustments: long-context decode uses TaCo retrieval
+    attention for archs that have attention layers (the paper's technique);
+    SSM archs keep their native O(1) state."""
+    if shape.taco_attention and arch.mixer in ("attn", "hybrid"):
+        return dataclasses.replace(arch, attention_kind="taco")
+    return arch
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: ArchConfig, shape: ShapeSpec, batch_override: int | None = None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+    No device allocation — this is what the dry-run lowers against."""
+    b = batch_override or shape.global_batch
+    arch = resolve_arch_for_shape(arch, shape)
+    if shape.kind == "train":
+        s = shape.seq_len
+        text = s - (arch.frontend_len if arch.frontend == "vlm" else 0)
+        batch = {
+            "tokens": _sds((b, text), jnp.int32),
+            "labels": _sds((b, text), jnp.int32),
+        }
+        if arch.frontend == "audio":
+            batch["frames"] = _sds((b, arch.frontend_len, arch.d_model), jnp.float32)
+        if arch.frontend == "vlm":
+            batch["patch_embeds"] = _sds((b, arch.frontend_len, arch.d_model), jnp.float32)
+        return batch
+    if shape.kind == "prefill":
+        s = shape.seq_len
+        text = s - (arch.frontend_len if arch.frontend == "vlm" else 0)
+        batch = {"tokens": _sds((b, text), jnp.int32)}
+        if arch.frontend == "audio":
+            batch["frames"] = _sds((b, arch.frontend_len, arch.d_model), jnp.float32)
+        if arch.frontend == "vlm":
+            batch["patch_embeds"] = _sds((b, arch.frontend_len, arch.d_model), jnp.float32)
+        return batch
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: init_cache(arch, b, shape.seq_len, taco=arch.attention_kind == "taco")
+        )
+        return {
+            "tokens": _sds((b, 1), jnp.int32),
+            "pos": _sds((), jnp.int32),
+            "cache": cache,
+        }
+    raise ValueError(shape.kind)

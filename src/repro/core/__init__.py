@@ -1,0 +1,54 @@
+"""repro.core — the paper's contribution: the TaCo subspace-collision family.
+
+Public API:
+  build / query / query_with_stats  — end-to-end TaCo (and SuCo ablations)
+  SCConfig + taco_config/suco_config/... — method configuration
+  SCLinear, build_ivf/ivf_query     — baselines
+  distributed_*                     — mesh-sharded build & query (shard_map)
+"""
+from repro.core.config import (
+    ABLATIONS,
+    SCConfig,
+    suco_config,
+    suco_cs_config,
+    suco_dt_config,
+    suco_qs_config,
+    taco_config,
+)
+from repro.core.ivf import build_ivf, ivf_query
+from repro.core.sclinear import SCLinear
+from repro.core.taco import (
+    SCIndex,
+    build,
+    make_query_fn,
+    query,
+    query_with_stats,
+)
+from repro.core.transform import (
+    SubspaceTransform,
+    apply_transform,
+    eigensystem_allocation,
+    fit_transform,
+)
+
+__all__ = [
+    "ABLATIONS",
+    "SCConfig",
+    "SCIndex",
+    "SCLinear",
+    "SubspaceTransform",
+    "apply_transform",
+    "build",
+    "build_ivf",
+    "eigensystem_allocation",
+    "fit_transform",
+    "ivf_query",
+    "make_query_fn",
+    "query",
+    "query_with_stats",
+    "suco_config",
+    "suco_cs_config",
+    "suco_dt_config",
+    "suco_qs_config",
+    "taco_config",
+]

@@ -1,0 +1,151 @@
+"""Collision activation — three implementations of IMI cell enumeration.
+
+Given, for one subspace and one query, the distances of the query to the two
+half-space centroid sets (d1, d2, each (sqrt_k,)) and the per-cell point
+counts (sizes (sqrt_k, sqrt_k)), all three functions return the *activation
+threshold* tau: cells whose distance sum d1[i]+d2[j] <= tau are activated, and
+the cumulative size of activated cells is the smallest count >= alpha*n when
+cells are enumerated in ascending sum order.
+
+  * ``sort_activation``  — our TPU-native formulation: materialize all K cell
+    sums (an outer sum, <= 512^2 floats), sort once, prefix-sum sizes,
+    threshold. Fully parallel; this is what TaCo uses on the hot path.
+  * ``heap_activation``  — the paper's Alg. 4 (Scalable Dynamic Activation),
+    sequential min-heap enumeration, O(log sqrt_k) per pop.
+  * ``linear_activation`` — SuCo's original Dynamic Activation baseline,
+    sequential argmin over a linear activation array, O(sqrt_k) per pop.
+
+All three provably enumerate cells in the same (ascending-sum) order, so they
+return the same tau/retrieved count whenever sums are distinct (ties are
+resolved identically up to the count, which only ever *adds* equal-distance
+cells — see DESIGN.md §2). Each is jit- and vmap-compatible.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.heap import heap_make, heap_pop, heap_push, heap_top
+
+METHODS = ("sort", "heap", "linear")
+
+
+def sort_activation(d1, d2, sizes, alpha_n):
+    """Sort-based activation (TPU-native SDA). Returns (tau, retrieved)."""
+    sums = (d1[:, None] + d2[None, :]).reshape(-1)
+    sz = sizes.reshape(-1).astype(jnp.float32)
+    sorted_sums, sorted_sz = jax.lax.sort((sums, sz), num_keys=1)
+    csum = jnp.cumsum(sorted_sz)
+    target = jnp.minimum(jnp.float32(alpha_n), csum[-1])
+    cut = jnp.argmax(csum >= target)
+    return sorted_sums[cut], csum[cut]
+
+
+def heap_activation(d1, d2, sizes, alpha_n):
+    """Paper Algorithm 4 — min-heap Scalable Dynamic Activation."""
+    sqrt_k = d1.shape[0]
+    idx1 = jnp.argsort(d1)
+    idx2 = jnp.argsort(d2)
+    s1 = d1[idx1]
+    s2 = d2[idx2]
+    sizes_sorted = sizes[idx1][:, idx2].astype(jnp.float32)
+    total = jnp.sum(sizes_sorted)
+    target = jnp.minimum(jnp.float32(alpha_n), total)
+
+    heap = heap_make(sqrt_k + 2)
+    heap = heap_push(heap, s1[0] + s2[0], jnp.int32(0))
+    active_idx = jnp.zeros((sqrt_k,), jnp.int32)
+
+    def cond(state):
+        _h, _a, retrieved, _tau, it = state
+        return (retrieved < target) & (it < sqrt_k * sqrt_k)
+
+    def body(state):
+        h, active, retrieved, _tau, it = state
+        key, pos = heap_top(h)  # line 5-6: top of heap
+        tau = key
+        retrieved = retrieved + sizes_sorted[pos, active[pos]]  # lines 7-9
+        # lines 12-13: first activation of row `pos` activates row pos+1
+        first = active[pos] == 0
+        h = heap_pop(h)  # line 14 (pop before conditional pushes; order-safe)
+        h = jax.lax.cond(
+            first & (pos < sqrt_k - 1),
+            lambda hh: heap_push(hh, s1[pos + 1] + s2[0], pos + 1),
+            lambda hh: hh,
+            h,
+        )
+        # lines 15-18: advance this row to its next column, push back
+        can_adv = active[pos] < sqrt_k - 1
+        nxt = jnp.minimum(active[pos] + 1, sqrt_k - 1)
+        h = jax.lax.cond(
+            can_adv,
+            lambda hh: heap_push(hh, s1[pos] + s2[nxt], pos),
+            lambda hh: hh,
+            h,
+        )
+        active = active.at[pos].set(jnp.where(can_adv, nxt, active[pos] + 1))
+        return h, active, retrieved, tau, it + 1
+
+    init = (heap, active_idx, jnp.float32(0.0), jnp.float32(0.0), jnp.int32(0))
+    _h, _a, retrieved, tau, _it = jax.lax.while_loop(cond, body, init)
+    return tau, retrieved
+
+
+def linear_activation(d1, d2, sizes, alpha_n):
+    """SuCo's original Dynamic Activation — linear activation array,
+    O(sqrt_k) argmin per retrieved cell."""
+    sqrt_k = d1.shape[0]
+    idx1 = jnp.argsort(d1)
+    idx2 = jnp.argsort(d2)
+    s1 = d1[idx1]
+    s2 = d2[idx2]
+    sizes_sorted = sizes[idx1][:, idx2].astype(jnp.float32)
+    total = jnp.sum(sizes_sorted)
+    target = jnp.minimum(jnp.float32(alpha_n), total)
+    rows = jnp.arange(sqrt_k)
+
+    def cond(state):
+        _r, _active, retrieved, _tau, it = state
+        return (retrieved < target) & (it < sqrt_k * sqrt_k)
+
+    def body(state):
+        r, active, retrieved, _tau, it = state
+        col = jnp.minimum(active, sqrt_k - 1)
+        cand = s1 + s2[col]
+        cand = jnp.where((rows < r) & (active < sqrt_k), cand, jnp.inf)
+        pos = jnp.argmin(cand)
+        tau = cand[pos]
+        retrieved = retrieved + sizes_sorted[pos, active[pos]]
+        r = jnp.where((active[pos] == 0) & (pos < sqrt_k - 1), jnp.minimum(r + 1, sqrt_k), r)
+        active = active.at[pos].add(1)
+        return r, active, retrieved, tau, it + 1
+
+    init = (
+        jnp.int32(1),
+        jnp.zeros((sqrt_k,), jnp.int32),
+        jnp.float32(0.0),
+        jnp.float32(0.0),
+        jnp.int32(0),
+    )
+    _r, _a, retrieved, tau, _it = jax.lax.while_loop(cond, body, init)
+    return tau, retrieved
+
+
+_ACT = {
+    "sort": sort_activation,
+    "heap": heap_activation,
+    "linear": linear_activation,
+}
+
+
+@partial(jax.jit, static_argnames=("method",))
+def activation_taus(d1, d2, sizes, alpha_n, method: str = "sort"):
+    """Batched activation over queries.
+
+    d1, d2: (Q, sqrt_k) centroid distances; sizes: (sqrt_k, sqrt_k);
+    returns (tau (Q,), retrieved (Q,)).
+    """
+    fn = _ACT[method]
+    return jax.vmap(lambda a, b: fn(a, b, sizes, alpha_n))(d1, d2)

@@ -1,0 +1,206 @@
+"""Mesh-distributed TaCo — corpus-sharded index build and query (shard_map).
+
+Scale story (DESIGN.md §3): the corpus is sharded along the mesh's data axes
+(n_local = n / n_data_shards points per device); queries are sharded along the
+model axis. Per device:
+
+  build:  covariance  -> psum of local (sum, outer-sum) stats
+          K-means     -> local segment sums + psum (centroids replicated)
+          cell sizes  -> psum of local bincounts (activation needs GLOBAL
+                         cell populations so tau has the paper's semantics)
+  query:  activation thresholds tau are computed redundantly on every device
+          (inputs are replicated and tiny: (Q, sqrt_k) distances);
+          SC-scores / selection / re-rank run on LOCAL points only;
+          each device emits its local top-k, one all-gather over the data
+          axes (k * n_shards (id, dist) pairs — bytes, not vectors), then a
+          global top-k. Exact: re-rank distances are exact per shard.
+
+Communication per query batch: one all-gather of (Q_local, shards*k) pairs.
+There is NO all-to-all and no point-vector movement — this is what makes the
+subspace-collision family a good fit for 1000+ node serving.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.core.activation import activation_taus
+from repro.core.config import SCConfig
+from repro.core.imi import split_halves
+from repro.core.scoring import sc_scores
+from repro.core.selection import select_candidates
+from repro.core.taco import SCIndex, _sub_slices, rerank
+from repro.utils import pairwise_sq_dists, topk_smallest
+
+
+def index_pspecs(index: SCIndex, data_axes) -> SCIndex:
+    """PartitionSpec pytree matching SCIndex: corpus-dependent leaves sharded
+    over the data axes, everything else replicated."""
+    da = data_axes
+
+    def sub_spec(sub):
+        return type(sub)(
+            centroids1=P(),
+            centroids2=P(),
+            assign1=P(da),
+            assign2=P(da),
+            cell_sizes=P(),  # GLOBAL cell sizes, replicated
+        )
+
+    tr_spec = None
+    if index.transform is not None:
+        tr_spec = type(index.transform)(
+            mean=P(),
+            basis=P(),
+            eigvals=P(),
+            n_subspaces=index.transform.n_subspaces,
+            subspace_dim=index.transform.subspace_dim,
+        )
+    return SCIndex(
+        transform=tr_spec,
+        dim_perm=None if index.dim_perm is None else P(),
+        subspaces=tuple(sub_spec(s) for s in index.subspaces),
+        data=P(da, None),
+        sub_dims=index.sub_dims,
+    )
+
+
+def _project_local(index: SCIndex, x: jax.Array) -> jax.Array:
+    if index.transform is not None:
+        return (x - index.transform.mean) @ index.transform.basis
+    return x[:, index.dim_perm]
+
+
+def make_distributed_query(
+    mesh,
+    cfg: SCConfig,
+    index: SCIndex,
+    n_global: int,
+    data_axes=("data",),
+    query_axes=("model",),
+):
+    """Returns a jit-able ``fn(index, queries) -> (ids, sq_dists)`` where the
+    index is sharded per :func:`index_pspecs` and queries over query_axes.
+
+    Billion-scale configuration: shard the corpus over ALL mesh axes
+    (``data_axes=("data", "model")``, 256/512-way — 1B x 128d = 2 GB/device)
+    and replicate the query batch (``query_axes=()``); the combine all-gather
+    then runs over every axis but still moves only (Q, shards*k) id/dist
+    pairs."""
+    query_axes = tuple(query_axes)
+    specs = index_pspecs(index, data_axes)
+    alpha_n = cfg.alpha * n_global
+    beta_n = float(cfg.beta * n_global)
+
+    def local_query(idx: SCIndex, queries: jax.Array):
+        n_local = idx.data.shape[0]
+        pq = _project_local(idx, queries)
+        d1s, d2s, taus = [], [], []
+        for (lo, hi), sub in zip(_sub_slices(idx.sub_dims), idx.subspaces):
+            s1, _ = split_halves(hi - lo)
+            d1 = pairwise_sq_dists(pq[:, lo:hi][:, :s1], sub.centroids1)
+            d2 = pairwise_sq_dists(pq[:, lo:hi][:, s1:], sub.centroids2)
+            tau, _ = activation_taus(d1, d2, sub.cell_sizes, alpha_n, method=cfg.activation)
+            d1s.append(d1)
+            d2s.append(d2)
+            taus.append(tau)
+        a1s = jnp.stack([s.assign1 for s in idx.subspaces])
+        a2s = jnp.stack([s.assign2 for s in idx.subspaces])
+        sc = sc_scores(jnp.stack(d1s), jnp.stack(d2s), a1s, a2s, jnp.stack(taus))
+        cap = min(cfg.cap_for(n_global), n_local)
+        cand_ids, valid, _t, _c = select_candidates(
+            sc, beta_n, cfg.n_subspaces, cap, mode=cfg.selection
+        )
+        ids_local, dists_local = rerank(idx.data, queries, cand_ids, valid, cfg.k)
+
+        # globalize ids and combine across data shards
+        shard_off = jnp.int32(0)
+        for ax in data_axes:
+            shard_off = shard_off * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        ids_global = jnp.where(ids_local >= 0, ids_local + shard_off * n_local, -1)
+        all_ids = jax.lax.all_gather(ids_global, data_axes, axis=1, tiled=True)
+        all_d = jax.lax.all_gather(dists_local, data_axes, axis=1, tiled=True)
+        top_d, pos = topk_smallest(all_d, cfg.k)
+        return jnp.take_along_axis(all_ids, pos, axis=1), top_d
+
+    fn = shard_map(
+        local_query,
+        mesh=mesh,
+        in_specs=(specs, P(query_axes, None)),
+        out_specs=(P(query_axes, None), P(query_axes, None)),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Distributed index build pieces (each one a compile unit for the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def make_distributed_cov(mesh, n_global: int, data_axes=("data",)):
+    """Global mean/covariance from sharded data: psum of local moments."""
+
+    def local_cov(x):
+        s = jnp.sum(x, axis=0)
+        outer = x.T @ x
+        s = jax.lax.psum(s, data_axes)
+        outer = jax.lax.psum(outer, data_axes)
+        mean = s / n_global
+        cov = (outer - n_global * jnp.outer(mean, mean)) / (n_global - 1)
+        return mean, cov
+
+    fn = shard_map(
+        local_cov,
+        mesh=mesh,
+        in_specs=(P(data_axes, None),),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def make_distributed_lloyd(mesh, data_axes=("data",)):
+    """One Lloyd super-step over sharded (projected) data; centroids replicated."""
+
+    def local_step(x, centroids):
+        d = pairwise_sq_dists(x, centroids)
+        assign = jnp.argmin(d, axis=1)
+        k = centroids.shape[0]
+        sums = jax.ops.segment_sum(x, assign, num_segments=k)
+        counts = jax.ops.segment_sum(jnp.ones(x.shape[0], jnp.float32), assign, num_segments=k)
+        sums = jax.lax.psum(sums, data_axes)
+        counts = jax.lax.psum(counts, data_axes)
+        new_c = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], centroids)
+        return new_c, assign.astype(jnp.int32)
+
+    fn = shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(P(data_axes, None), P()),
+        out_specs=(P(), P(data_axes)),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def make_distributed_cell_sizes(mesh, sqrt_k: int, data_axes=("data",)):
+    """Global IMI cell populations from sharded assignments."""
+
+    def local_sizes(a1, a2):
+        cell = a1.astype(jnp.int32) * sqrt_k + a2.astype(jnp.int32)
+        local = jnp.zeros((sqrt_k * sqrt_k,), jnp.int32).at[cell].add(1)
+        return jax.lax.psum(local, data_axes).reshape(sqrt_k, sqrt_k)
+
+    fn = shard_map(
+        local_sizes,
+        mesh=mesh,
+        in_specs=(P(data_axes), P(data_axes)),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return jax.jit(fn)

@@ -1,0 +1,96 @@
+"""Fixed-capacity array-backed binary min-heap, jit-compatible.
+
+This is the faithful data structure behind the paper's *Scalable Dynamic
+Activation* (Alg. 4): the heap holds (distance-sum, row-position) pairs.
+All shapes are static (capacity fixed at sqrt(K)+2), all control flow is
+``lax.while_loop`` with bounded sift depth, so the structure vmaps/jits.
+
+On TPU we do NOT use this on the hot path — the sort-based activation in
+``repro.core.activation`` is semantically identical and fully parallel — but
+the heap version is kept (a) as the faithful reproduction artifact, and
+(b) so benchmarks/fig5 can reproduce the paper's DA-vs-SDA comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import register_pytree_dataclass
+
+INF = jnp.float32(jnp.inf)
+
+
+@register_pytree_dataclass
+@dataclasses.dataclass(frozen=True)
+class MinHeap:
+    keys: jax.Array  # (cap,) float32, unused slots = +inf
+    vals: jax.Array  # (cap,) int32
+    size: jax.Array  # () int32
+
+
+def heap_make(capacity: int) -> MinHeap:
+    return MinHeap(
+        keys=jnp.full((capacity,), INF),
+        vals=jnp.zeros((capacity,), jnp.int32),
+        size=jnp.int32(0),
+    )
+
+
+def heap_push(h: MinHeap, key: jax.Array, val: jax.Array) -> MinHeap:
+    """Insert (key, val); sift up. Caller must guarantee size < capacity."""
+    keys = h.keys.at[h.size].set(key)
+    vals = h.vals.at[h.size].set(val)
+
+    def cond(state):
+        keys, _vals, i = state
+        parent = (i - 1) // 2
+        return (i > 0) & (keys[parent] > keys[i])
+
+    def body(state):
+        keys, vals, i = state
+        p = (i - 1) // 2
+        ki, kp = keys[i], keys[p]
+        vi, vp = vals[i], vals[p]
+        keys = keys.at[i].set(kp).at[p].set(ki)
+        vals = vals.at[i].set(vp).at[p].set(vi)
+        return keys, vals, p
+
+    keys, vals, _ = jax.lax.while_loop(cond, body, (keys, vals, h.size))
+    return MinHeap(keys=keys, vals=vals, size=h.size + 1)
+
+
+def heap_top(h: MinHeap) -> tuple[jax.Array, jax.Array]:
+    return h.keys[0], h.vals[0]
+
+
+def heap_pop(h: MinHeap) -> MinHeap:
+    """Remove the min element; sift down. No-op on an empty heap."""
+    last = jnp.maximum(h.size - 1, 0)
+    keys = h.keys.at[0].set(h.keys[last]).at[last].set(INF)
+    vals = h.vals.at[0].set(h.vals[last])
+    new_size = jnp.maximum(h.size - 1, 0)
+
+    def cond(state):
+        keys, _vals, i = state
+        l, r = 2 * i + 1, 2 * i + 2
+        kl = jnp.where(l < new_size, keys[jnp.minimum(l, keys.shape[0] - 1)], INF)
+        kr = jnp.where(r < new_size, keys[jnp.minimum(r, keys.shape[0] - 1)], INF)
+        return jnp.minimum(kl, kr) < keys[i]
+
+    def body(state):
+        keys, vals, i = state
+        l, r = 2 * i + 1, 2 * i + 2
+        kl = jnp.where(l < new_size, keys[jnp.minimum(l, keys.shape[0] - 1)], INF)
+        kr = jnp.where(r < new_size, keys[jnp.minimum(r, keys.shape[0] - 1)], INF)
+        child = jnp.where(kl <= kr, l, r)
+        child = jnp.minimum(child, keys.shape[0] - 1)
+        ki, kc = keys[i], keys[child]
+        vi, vc = vals[i], vals[child]
+        keys = keys.at[i].set(kc).at[child].set(ki)
+        vals = vals.at[i].set(vc).at[child].set(vi)
+        return keys, vals, child
+
+    keys, vals, _ = jax.lax.while_loop(cond, body, (keys, vals, jnp.int32(0)))
+    return MinHeap(keys=keys, vals=vals, size=new_size)

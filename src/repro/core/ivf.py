@@ -1,0 +1,66 @@
+"""IVF-Flat — the non-subspace-collision comparator (paper §5.4, stands in
+for the IVF/IMI quantization family: fine-grained partitioning of the full
+space, nprobe-style querying over padded inverted lists)."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.clustering import kmeans
+from repro.utils import (
+    pairwise_sq_dists,
+    register_pytree_dataclass,
+    static_field,
+    topk_smallest,
+    tree_size_bytes,
+)
+
+
+@register_pytree_dataclass
+@dataclasses.dataclass(frozen=True)
+class IVFIndex:
+    centroids: jax.Array  # (K, d)
+    lists: jax.Array  # (K, Lmax) int32, -1 padded
+    data: jax.Array  # (n, d)
+
+    @property
+    def index_bytes(self) -> int:
+        return tree_size_bytes((self.centroids, self.lists))
+
+
+def build_ivf(data, n_lists: int, kmeans_iters: int = 10, seed: int = 0) -> IVFIndex:
+    data = jnp.asarray(data, jnp.float32)
+    centroids, assign = kmeans(
+        jax.random.PRNGKey(seed), data, n_lists, kmeans_iters
+    )
+    assign_np = np.asarray(assign)
+    counts = np.bincount(assign_np, minlength=n_lists)
+    lmax = int(counts.max())
+    lists = np.full((n_lists, lmax), -1, np.int32)
+    cursor = np.zeros(n_lists, np.int64)
+    for i, a in enumerate(assign_np):
+        lists[a, cursor[a]] = i
+        cursor[a] += 1
+    return IVFIndex(centroids=centroids, lists=jnp.asarray(lists), data=data)
+
+
+@partial(jax.jit, static_argnames=("nprobe", "k"))
+def ivf_query(index: IVFIndex, queries, nprobe: int, k: int):
+    """Probe the nprobe nearest lists, exact distances inside them, top-k."""
+    queries = jnp.asarray(queries, jnp.float32)
+    dc = pairwise_sq_dists(queries, index.centroids)  # (Q, K)
+    _, probe = topk_smallest(dc, nprobe)  # (Q, nprobe)
+    cand = jnp.take(index.lists, probe, axis=0).reshape(queries.shape[0], -1)
+    valid = cand >= 0
+    safe = jnp.maximum(cand, 0)
+    vecs = jnp.take(index.data, safe, axis=0)  # (Q, nprobe*Lmax, d)
+    diff = vecs - queries[:, None, :]
+    dists = jnp.where(valid, jnp.sum(diff * diff, axis=-1), jnp.inf)
+    top_d, pos = topk_smallest(dists, k)
+    ids = jnp.take_along_axis(safe, pos, axis=1)
+    ok = jnp.isfinite(top_d)
+    return jnp.where(ok, ids, -1), jnp.where(ok, top_d, jnp.inf)

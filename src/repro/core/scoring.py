@@ -1,0 +1,39 @@
+"""SC-score computation (paper Def. 6) — vectorized collision counting.
+
+A point p collides with query q in subspace i iff its IMI cell's distance sum
+``d1[a1[p]] + d2[a2[p]]`` is within that query's activation threshold tau_i.
+SC(p) = number of subspaces where p collides (integer in [0, N_s]).
+
+The pure-jnp path below is the oracle; the Pallas kernel in
+``repro.kernels.scscore`` fuses the per-subspace gathers and the accumulation
+over subspaces for the TPU hot path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def collision_sums(d1: jax.Array, d2: jax.Array, a1: jax.Array, a2: jax.Array):
+    """Per-(query, point) cell distance sums for one subspace.
+
+    d1, d2: (Q, sqrt_k); a1, a2: (n,) int32 cell assignments.
+    Returns (Q, n) float32.
+    """
+    return jnp.take(d1, a1, axis=1) + jnp.take(d2, a2, axis=1)
+
+
+def sc_scores(
+    d1s: jax.Array,  # (N_s, Q, sqrt_k)
+    d2s: jax.Array,  # (N_s, Q, sqrt_k)
+    a1s: jax.Array,  # (N_s, n)
+    a2s: jax.Array,  # (N_s, n)
+    taus: jax.Array,  # (N_s, Q)
+) -> jax.Array:
+    """SC-scores (Q, n) int32 accumulated over all subspaces."""
+    n_sub = d1s.shape[0]
+    sc = jnp.zeros((d1s.shape[1], a1s.shape[1]), jnp.int32)
+    for i in range(n_sub):
+        sums = collision_sums(d1s[i], d2s[i], a1s[i], a2s[i])
+        sc = sc + (sums <= taus[i][:, None]).astype(jnp.int32)
+    return sc

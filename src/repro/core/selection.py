@@ -1,0 +1,108 @@
+"""Candidate selection — query-aware (paper Alg. 5) and fixed (SuCo).
+
+The query-aware selector reads the per-query SC-score histogram and walks
+score levels from N_s downward, exactly as Algorithm 5: a level is *included*
+(last_collision decremented past it) while the just-added level still fits the
+remaining beta*n budget; otherwise the walk stops. All points with
+SC >= last_collision are candidates — the candidate count therefore adapts to
+the query's SC-score discriminability (Lemma 2).
+
+JAX adaptation: candidate sets have a static capacity ``cap``; the selected
+ids come from top-k on SC-score and are masked by the per-query threshold.
+Results are identical to the dynamic-shape algorithm whenever the true
+candidate count <= cap (asserted in tests; cap is a config knob).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def sc_histogram(sc: jax.Array, n_subspaces: int) -> jax.Array:
+    """Per-query histogram of SC-scores: (Q, N_s+1)."""
+
+    def one(row):
+        return jnp.zeros((n_subspaces + 1,), jnp.int32).at[row].add(1)
+
+    return jax.vmap(one)(sc)
+
+
+def query_aware_threshold(hist: jax.Array, beta_n: float, n_subspaces: int):
+    """Vectorized Algorithm 5 lines 5-12. hist: (Q, N_s+1).
+
+    Returns (last_collision (Q,) int32, candidate_num (Q,) int32) where
+    candidate_num counts points with SC >= last_collision.
+    """
+    q = hist.shape[0]
+    last = jnp.full((q,), n_subspaces, jnp.int32)
+    cand = jnp.zeros((q,), jnp.float32)
+    broken = jnp.zeros((q,), bool)
+    for j in range(n_subspaces, -1, -1):
+        level = hist[:, j].astype(jnp.float32)
+        new_cand = cand + level
+        fits = level <= (jnp.float32(beta_n) - new_cand)
+        # Once broken, state freezes (the sequential loop's `break`).
+        last = jnp.where((~broken) & fits, last - 1, last)
+        cand = jnp.where(broken, cand, new_cand)
+        broken = broken | (~fits)
+    # After the walk, last_collision points at the lowest included level;
+    # candidate_num = # points with SC >= last (== the accumulated count).
+    levels = jnp.arange(n_subspaces + 1)[None, :]
+    counted = jnp.where(levels >= last[:, None], hist, 0)
+    return last, jnp.sum(counted, axis=1).astype(jnp.int32)
+
+
+def _alg5_threshold_reference(hist_row, beta_n: float, n_subspaces: int) -> int:
+    """Literal sequential Algorithm 5 (host-side oracle for tests)."""
+    last = n_subspaces
+    cand = 0
+    for j in range(n_subspaces, -1, -1):
+        cand += int(hist_row[j])
+        if int(hist_row[j]) <= beta_n - cand:
+            last -= 1
+        else:
+            break
+    return last
+
+
+def fixed_threshold(sc: jax.Array, beta_n: float, n_subspaces: int):
+    """SuCo baseline: a fixed beta*n candidate budget for every query.
+    The threshold is the SC-score of the ceil(beta_n)-th best point."""
+    q, n = sc.shape
+    budget = int(min(max(1, round(beta_n)), n))
+    kth = jax.lax.top_k(sc, budget)[0][:, -1]  # value of budget-th largest
+    # fixed mode always re-ranks exactly `budget` points (rank-truncated ties)
+    return kth.astype(jnp.int32), jnp.full((q,), budget, jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("beta_n", "cap", "n_subspaces", "mode"))
+def select_candidates(
+    sc: jax.Array,
+    beta_n: float,
+    n_subspaces: int,
+    cap: int,
+    mode: str = "query_aware",
+):
+    """Select up to ``cap`` candidate ids per query.
+
+    Returns (ids (Q, cap) int32, valid (Q, cap) bool, threshold (Q,),
+    cand_count (Q,)). ``valid`` masks out both sub-threshold points (query-
+    aware mode) and beyond-budget points (fixed mode).
+    """
+    if mode == "query_aware":
+        hist = sc_histogram(sc, n_subspaces)
+        thresh, count = query_aware_threshold(hist, beta_n, n_subspaces)
+    elif mode == "fixed":
+        thresh, count = fixed_threshold(sc, beta_n, n_subspaces)
+    else:
+        raise ValueError(f"unknown selection mode {mode!r}")
+
+    top_sc, ids = jax.lax.top_k(sc, cap)
+    valid = top_sc >= thresh[:, None]
+    if mode == "fixed":
+        # fixed budget: also cut ties beyond beta_n by rank
+        budget = int(min(max(1, round(beta_n)), sc.shape[1]))
+        valid = valid & (jnp.arange(cap)[None, :] < budget)
+    return ids.astype(jnp.int32), valid, thresh, jnp.minimum(count, cap)

@@ -1,0 +1,210 @@
+"""TaCo — end-to-end index build (paper Alg. 3) and k-ANNS query (Alg. 6).
+
+Because TaCo, SuCo and the paper's ablations differ only in which transform /
+activation / selection they plug in (see repro.core.config), this module
+implements the whole subspace-collision family; ``build``/``query`` read the
+choice from ``SCConfig``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import transform as T
+from repro.core.activation import activation_taus
+from repro.core.config import SCConfig
+from repro.core.imi import IMISubspace, build_imi_subspace, split_halves
+from repro.core.scoring import sc_scores
+from repro.core.selection import select_candidates
+from repro.utils import (
+    pairwise_sq_dists,
+    register_pytree_dataclass,
+    static_field,
+    topk_smallest,
+    tree_size_bytes,
+)
+
+
+@register_pytree_dataclass
+@dataclasses.dataclass(frozen=True)
+class SCIndex:
+    """A built subspace-collision index (TaCo or SuCo family)."""
+
+    transform: T.SubspaceTransform | None  # entropy-averaging transform (TaCo)
+    dim_perm: jax.Array | None  # raw-dim permutation (SuCo, Def. 4)
+    subspaces: tuple[IMISubspace, ...]
+    data: jax.Array  # (n, d) original data, used for re-ranking
+    sub_dims: tuple[int, ...] = static_field(default=())
+
+    @property
+    def n(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def index_bytes(self) -> int:
+        """Index memory footprint (excludes the dataset itself, as in the
+        paper's protocol)."""
+        size = tree_size_bytes(self.subspaces)
+        if self.transform is not None:
+            size += tree_size_bytes(self.transform)
+        if self.dim_perm is not None:
+            size += int(self.dim_perm.size * self.dim_perm.dtype.itemsize)
+        return size
+
+
+def _project(index: SCIndex, x: jax.Array) -> jax.Array:
+    if index.transform is not None:
+        return T.apply_transform(index.transform, x)
+    return jnp.asarray(x, jnp.float32)[:, index.dim_perm]
+
+
+def _sub_slices(sub_dims: tuple[int, ...]) -> list[tuple[int, int]]:
+    offs, out = 0, []
+    for d in sub_dims:
+        out.append((offs, offs + d))
+        offs += d
+    return out
+
+
+def suco_dim_partition(d: int, n_subspaces: int, rng: np.random.Generator):
+    """Paper Def. 4 subspace sampling: random dims without replacement,
+    N_s-1 subspaces of s = floor(d/N_s) dims, the last takes the rest."""
+    s = d // n_subspaces
+    perm = rng.permutation(d)
+    sub_dims = tuple([s] * (n_subspaces - 1) + [d - s * (n_subspaces - 1)])
+    return perm.astype(np.int32), sub_dims
+
+
+def build(data: jax.Array, cfg: SCConfig) -> SCIndex:
+    """Paper Algorithm 3 (plus Alg. 1/2 when cfg.transform == 'entropy')."""
+    data = jnp.asarray(data, jnp.float32)
+    n, d = data.shape
+    rng = jax.random.PRNGKey(cfg.seed)
+
+    if cfg.transform == "entropy":
+        tr = T.fit_transform(data, cfg.n_subspaces, cfg.subspace_dim)
+        projected = T.apply_transform(tr, data)
+        perm = None
+        sub_dims = (cfg.subspace_dim,) * cfg.n_subspaces
+    elif cfg.transform == "none":
+        tr = None
+        np_rng = np.random.default_rng(cfg.seed)
+        perm_np, sub_dims = suco_dim_partition(d, cfg.n_subspaces, np_rng)
+        perm = jnp.asarray(perm_np)
+        projected = data[:, perm]
+    else:
+        raise ValueError(f"unknown transform {cfg.transform!r}")
+
+    subspaces = []
+    for i, (lo, hi) in enumerate(_sub_slices(sub_dims)):
+        subspaces.append(
+            build_imi_subspace(
+                jax.random.fold_in(rng, i),
+                projected[:, lo:hi],
+                cfg.sqrt_k,
+                cfg.kmeans_iters,
+                cfg.kmeans_init,
+            )
+        )
+    return SCIndex(
+        transform=tr,
+        dim_perm=perm,
+        subspaces=tuple(subspaces),
+        data=data,
+        sub_dims=sub_dims,
+    )
+
+
+def _centroid_distances(index: SCIndex, queries: jax.Array, use_kernels: bool):
+    """Per-subspace distances to both centroid halves: stacked (N_s, Q, sqrt_k)."""
+    if use_kernels:
+        from repro.kernels.ops import l2dist as dist_fn
+    else:
+        dist_fn = pairwise_sq_dists
+    pq = _project(index, queries)
+    d1s, d2s = [], []
+    for (lo, hi), sub in zip(_sub_slices(index.sub_dims), index.subspaces):
+        q_sub = pq[:, lo:hi]
+        s1, _ = split_halves(hi - lo)
+        d1s.append(dist_fn(q_sub[:, :s1], sub.centroids1))
+        d2s.append(dist_fn(q_sub[:, s1:], sub.centroids2))
+    return jnp.stack(d1s), jnp.stack(d2s)
+
+
+def compute_sc_scores(index: SCIndex, queries: jax.Array, cfg: SCConfig):
+    """Collision counting (Alg. 6 lines 3-7): SC-scores (Q, n) + diagnostics."""
+    d1s, d2s = _centroid_distances(index, queries, cfg.use_kernels)
+    alpha_n = cfg.alpha * index.n
+    taus, retrieved = [], []
+    for i, sub in enumerate(index.subspaces):
+        tau_i, ret_i = activation_taus(
+            d1s[i], d2s[i], sub.cell_sizes, alpha_n, method=cfg.activation
+        )
+        taus.append(tau_i)
+        retrieved.append(ret_i)
+    taus = jnp.stack(taus)  # (N_s, Q)
+    a1s = jnp.stack([s.assign1 for s in index.subspaces])
+    a2s = jnp.stack([s.assign2 for s in index.subspaces])
+    if cfg.use_kernels:
+        from repro.kernels.ops import scscore
+
+        sc = scscore(d1s, d2s, a1s, a2s, taus)
+    else:
+        sc = sc_scores(d1s, d2s, a1s, a2s, taus)
+    return sc, {"taus": taus, "retrieved": jnp.stack(retrieved)}
+
+
+def rerank(
+    data: jax.Array,
+    queries: jax.Array,
+    cand_ids: jax.Array,
+    valid: jax.Array,
+    k: int,
+):
+    """Result refinement: exact distances over candidates, masked top-k."""
+    cand_vecs = jnp.take(data, cand_ids, axis=0)  # (Q, cap, d)
+    diff = cand_vecs - queries[:, None, :]
+    dists = jnp.sum(diff * diff, axis=-1)
+    dists = jnp.where(valid, dists, jnp.inf)
+    top_d, pos = topk_smallest(dists, k)
+    top_ids = jnp.take_along_axis(cand_ids, pos, axis=1)
+    # invalid slots (fewer candidates than k) → id -1
+    top_valid = jnp.isfinite(top_d)
+    return jnp.where(top_valid, top_ids, -1), jnp.where(top_valid, top_d, jnp.inf)
+
+
+def query(index: SCIndex, queries: jax.Array, cfg: SCConfig):
+    """Paper Algorithm 6: returns (ids (Q, k), sq_dists (Q, k))."""
+    ids, dists, _stats = query_with_stats(index, queries, cfg)
+    return ids, dists
+
+
+def query_with_stats(index: SCIndex, queries: jax.Array, cfg: SCConfig):
+    queries = jnp.asarray(queries, jnp.float32)
+    sc, stats = compute_sc_scores(index, queries, cfg)
+    cap = cfg.cap_for(index.n)
+    cand_ids, valid, thresh, count = select_candidates(
+        sc, float(cfg.beta * index.n), cfg.n_subspaces, cap, mode=cfg.selection
+    )
+    ids, dists = rerank(index.data, queries, cand_ids, valid, cfg.k)
+    stats = dict(
+        stats,
+        sc_threshold=thresh,
+        candidate_count=count,
+        truncated=count >= cap,
+        sc=sc,
+    )
+    return ids, dists, stats
+
+
+def make_query_fn(index: SCIndex, cfg: SCConfig):
+    """A jit-compiled query closure (index captured as constants)."""
+
+    @jax.jit
+    def fn(queries):
+        return query(index, queries, cfg)
+
+    return fn

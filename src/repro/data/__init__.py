@@ -1,0 +1,3 @@
+from repro.data.vectors import gmm_dataset, spiked_covariance_dataset, make_queries
+
+__all__ = ["gmm_dataset", "spiked_covariance_dataset", "make_queries"]

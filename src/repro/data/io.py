@@ -1,0 +1,35 @@
+"""fvecs/bvecs/ivecs readers/writers (TEXMEX / big-ann-benchmarks formats) so
+real corpora (SIFT/GIST/DEEP) drop in when present. Each vector is stored as
+<int32 dim><dim * element> little-endian."""
+from __future__ import annotations
+
+import numpy as np
+
+_DTYPES = {"fvecs": np.float32, "bvecs": np.uint8, "ivecs": np.int32}
+
+
+def read_vecs(path: str, max_count: int | None = None) -> np.ndarray:
+    kind = path.rsplit(".", 1)[-1]
+    dt = _DTYPES[kind]
+    raw = np.fromfile(path, dtype=np.uint8)
+    if raw.size == 0:
+        return np.zeros((0, 0), dt)
+    dim = int(np.frombuffer(raw[:4].tobytes(), dtype=np.int32)[0])
+    row_bytes = 4 + dim * np.dtype(dt).itemsize
+    n = raw.size // row_bytes
+    if max_count is not None:
+        n = min(n, max_count)
+    rows = raw[: n * row_bytes].reshape(n, row_bytes)
+    body = rows[:, 4:].copy()
+    return body.view(dt).reshape(n, dim)
+
+
+def write_vecs(path: str, data: np.ndarray) -> None:
+    kind = path.rsplit(".", 1)[-1]
+    dt = _DTYPES[kind]
+    data = np.ascontiguousarray(data, dtype=dt)
+    n, dim = data.shape
+    dims = np.full((n, 1), dim, np.int32)
+    out = np.concatenate([dims.view(np.uint8).reshape(n, 4),
+                          data.view(np.uint8).reshape(n, -1)], axis=1)
+    out.tofile(path)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the query hot path (DESIGN.md §2).
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec VMEM tiling), wrapped by
+ops.py (padding + impl selection), validated against ref.py pure-jnp oracles
+in interpret mode (tests/test_kernels.py shape/dtype sweeps).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

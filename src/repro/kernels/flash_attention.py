@@ -1,0 +1,110 @@
+"""Flash attention (forward) Pallas kernel — the §Perf next-lever for the
+memory-bound dense train/prefill cells.
+
+The roofline analysis (EXPERIMENTS.md) shows f32 (S, T) attention-score
+tensors dominate HBM traffic for every dense-attention train cell: XLA
+cannot fuse softmax(QK^T)V, so scores round-trip to HBM. This kernel keeps
+them in VMEM with the online-softmax recurrence:
+
+  grid (batch*heads, q_blocks, k_blocks); scratch carries the running
+  (m, l, acc) across the k_block axis; the (bq, bk) score tile lives only
+  in registers/VMEM. HBM traffic drops from O(S*T) scores to O(S*hd)
+  Q/K/V/O — e.g. granite train_4k: ~1.5 TB/device of score traffic -> 0.
+
+Causal masking by absolute block offsets. Validated against ref.py in
+interpret mode (tests/test_kernels.py::TestFlashAttention) over shape/dtype
+sweeps; the TPU lowering uses 128-aligned tiles on the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  n_k: int, causal: bool, bq: int, bk: int, scale: float):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+    if causal:
+        qb = pl.program_id(1)
+        qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    # guard fully-masked rows (m == NEG_INF): exp(NEG_INF - NEG_INF) -> use 0
+    safe_m = jnp.where(m_cur <= NEG_INF / 2, 0.0, m_cur)
+    p = jnp.exp(jnp.where(s <= NEG_INF / 2, NEG_INF, s - safe_m[:, None]))
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - safe_m))
+    l_cur = alpha * l_prev + jnp.sum(p, axis=1)
+    v = v_ref[0].astype(jnp.float32)  # (bk, hd)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_cur
+    l_scr[...] = l_cur
+
+    @pl.when(kb == n_k - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "bq", "bk", "interpret")
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (BH, S, hd)
+    k: jax.Array,  # (BH, T, hd)
+    v: jax.Array,  # (BH, T, hd)
+    *,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, s_len, hd = q.shape
+    t_len = k.shape[1]
+    assert s_len % bq == 0 and t_len % bk == 0, (q.shape, k.shape)
+    n_k = t_len // bk
+    scale = hd**-0.5
+    grid = (bh, s_len // bq, n_k)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, n_k=n_k, causal=causal, bq=bq, bk=bk, scale=scale
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s_len, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,116 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Each op pads inputs to kernel block multiples (padding schemes chosen so the
+math stays exact — see each kernel's docstring), invokes the kernel, and
+slices the result back. ``impl`` selects:
+
+  'auto'   — compiled Pallas on TPU, pure-jnp oracle elsewhere (CPU interpret
+             mode is a correctness tool, not a performance path),
+  'pallas' — force the kernel (interpret=True off-TPU; used by kernel tests),
+  'jnp'    — force the oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.l2dist import l2dist_pallas
+from repro.kernels.kmeans_assign import kmeans_assign_pallas
+from repro.kernels.scscore import scscore_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)"""
+    if impl == "auto":
+        return (True, False) if _on_tpu() else (False, False)
+    if impl == "pallas":
+        return True, not _on_tpu()
+    if impl == "jnp":
+        return False, False
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def _pad_axis(x, axis: int, mult: int, value=0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def l2dist(x: jax.Array, y: jax.Array, impl: str = "auto") -> jax.Array:
+    """Squared L2 distance matrix (M, N) between rows of x (M,d), y (N,d)."""
+    use_pallas, interpret = _resolve(impl)
+    if not use_pallas:
+        return ref.l2dist_ref(x, y)
+    m, n = x.shape[0], y.shape[0]
+    bm = bn = 128
+    bk = 128
+    xp = _pad_axis(_pad_axis(x.astype(jnp.float32), 0, bm), 1, bk)
+    yp = _pad_axis(_pad_axis(y.astype(jnp.float32), 0, bn), 1, bk)
+    out = l2dist_pallas(xp, yp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n]
+
+
+def kmeans_assign(x: jax.Array, c: jax.Array, impl: str = "auto"):
+    """(assignments (n,) int32, min sq dist (n,) f32)."""
+    use_pallas, interpret = _resolve(impl)
+    if not use_pallas:
+        return ref.kmeans_assign_ref(x, c)
+    n, k = x.shape[0], c.shape[0]
+    bn = 256
+    xp = _pad_axis(_pad_axis(x.astype(jnp.float32), 0, bn), 1, 128)
+    cp = _pad_axis(c.astype(jnp.float32), 1, 128)
+    cp = _pad_axis(cp, 0, 128, value=1e15)  # padded centroids never win
+    a, d = kmeans_assign_pallas(xp, cp, bn=bn, interpret=interpret)
+    return a[:n], d[:n]
+
+
+def scscore(d1s, d2s, a1s, a2s, taus, impl: str = "auto") -> jax.Array:
+    """Fused SC-score accumulation (Q, n); see kernels/scscore.py."""
+    use_pallas, interpret = _resolve(impl)
+    if not use_pallas:
+        return ref.scscore_ref(d1s, d2s, a1s, a2s, taus)
+    _n_sub, q, _sk = d1s.shape
+    n = a1s.shape[1]
+    bq, bn = 8, 512
+    d1p = _pad_axis(_pad_axis(d1s.astype(jnp.float32), 1, bq), 2, 128)
+    d2p = _pad_axis(_pad_axis(d2s.astype(jnp.float32), 1, bq), 2, 128)
+    a1p = _pad_axis(a1s.astype(jnp.int32), 1, bn)
+    a2p = _pad_axis(a2s.astype(jnp.int32), 1, bn)
+    taup = _pad_axis(taus.astype(jnp.float32), 1, bq)
+    out = scscore_pallas(d1p, d2p, a1p, a2p, taup, bq=bq, bn=bn, interpret=interpret)
+    return out[:q, :n]
+
+
+def flash_attention(q, k, v, causal: bool = True, impl: str = "auto"):
+    """Fused softmax attention (BH, S, hd) — scores never reach HBM."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    use_pallas, interpret = _resolve(impl)
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal)
+    s, t = q.shape[1], k.shape[1]
+    bq = min(128, s)
+    bk = min(128, t)
+    qp = _pad_axis(q, 1, bq)
+    kp = _pad_axis(k, 1, bk)
+    vp = _pad_axis(v, 1, bk)
+    if kp.shape[1] > t:
+        # padded keys must never win the softmax: push them out of range by
+        # masking via huge negative values on the padded rows of k — achieved
+        # by padding q instead and masking at the causal stage is not enough
+        # for non-causal; simplest exact route: pad with zeros and rely on
+        # causal mask (causal=True) or slice-safe equal shapes (tests use
+        # block-divisible shapes for non-causal).
+        assert causal or kp.shape[1] == t, "non-causal needs bk-divisible T"
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, bq=bq, bk=bk,
+                                 interpret=interpret)
+    return out[:, :s]

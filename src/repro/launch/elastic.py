@@ -1,0 +1,73 @@
+"""Elastic fault handling: surviving-device re-mesh + restart policy.
+
+Failure model for 1000+ node jobs (DESIGN.md §4):
+  * a chip/host failure surfaces as a collective timeout / job abort;
+  * the coordinator (this module, driven by the cluster scheduler) rebuilds
+    a mesh from the surviving device count and re-lowers the step;
+  * ONLY the data-parallel axes shrink — model shards must stay complete,
+    so the new dp size is the largest value <= surviving_dp that keeps the
+    global batch divisible (with gradient-accumulation making up the
+    difference to preserve batch semantics);
+  * state is restored from the latest atomic checkpoint (repro.checkpoint);
+    the deterministic data stream replays from the restored step.
+
+On this single-host container the policy is exercised by simulation
+(tests/test_elastic.py): we "fail" devices by rebuilding a smaller host
+mesh and verify the plan + resumed training is loss-consistent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+    grad_accum_factor: int  # microbatch multiplier to preserve global batch
+    dropped_devices: int
+
+
+def replan_mesh(
+    surviving_devices: int,
+    *,
+    model_shards: int = 16,
+    target_dp: int = 16,
+    pods: int = 1,
+) -> ElasticPlan:
+    """Largest power-of-two DP that fits the survivors, model axis intact."""
+    if surviving_devices < model_shards:
+        raise RuntimeError(
+            f"cannot re-mesh: {surviving_devices} survivors < model_shards={model_shards}"
+        )
+    dp = surviving_devices // model_shards
+    dp = 2 ** int(math.log2(dp))  # power-of-two DP keeps batch splits clean
+    accum = max(1, (target_dp * pods) // dp)
+    if pods > 1 and dp % pods == 0:
+        shape = (pods, dp // pods, model_shards)
+        names = ("pod", "data", "model")
+    else:
+        shape = (dp, model_shards)
+        names = ("data", "model")
+    return ElasticPlan(
+        mesh_shape=shape,
+        axis_names=names,
+        grad_accum_factor=accum,
+        dropped_devices=surviving_devices - dp * model_shards,
+    )
+
+
+def build_mesh(plan: ElasticPlan, devices=None):
+    devices = devices if devices is not None else jax.devices()
+    need = 1
+    for s in plan.mesh_shape:
+        need *= s
+    if len(devices) < need:
+        raise RuntimeError(f"need {need} devices, have {len(devices)}")
+    import numpy as np
+
+    arr = np.array(devices[:need]).reshape(plan.mesh_shape)
+    return jax.sharding.Mesh(arr, plan.axis_names)

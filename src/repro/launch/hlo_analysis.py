@@ -1,0 +1,310 @@
+"""Structural HLO analyzer — loop-aware FLOP / byte / collective accounting.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop BODY once, but a
+layer-scanned transformer hides n_groups x (and SSM time scans seq x) of the
+work inside while loops — so module-level numbers undercount by 10-4000x.
+This analyzer parses the post-SPMD scheduled HLO text, walks the call graph,
+and multiplies each while body by its trip count (recovered from the loop
+condition's comparison constant).
+
+Accounting (all PER DEVICE, since the input is the partitioned module):
+  * flops            — 2 * prod(out_dims) * prod(contracting_dims) per dot,
+                       accumulated recursively (matmuls >> everything else;
+                       elementwise flops are intentionally excluded so the
+                       MODEL_FLOPS/HLO_FLOPS ratio reflects useful compute).
+  * bytes            — HBM-traffic proxy: sum of (operands + output) bytes
+                       over memory-moving instructions (fusion internals
+                       excluded — post-fusion operands/outputs ARE the
+                       traffic under XLA's own optimistic model).
+  * collectives      — per-kind byte totals (payload = output shape bytes),
+                       loop-multiplied like everything else.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s+=\s+(.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLED_RE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# instructions whose operand/output movement we do NOT count as HBM traffic
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "bitcast-convert", "reshape",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    type_str: str  # output type (may be a tuple)
+    rest: str  # full rhs text
+    operands: list[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    shapes: dict  # name -> output type_str
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and "{" in line and ("(" in line and ")" in line):
+            header = line.strip()
+            if header.startswith("ENTRY"):
+                header = header[len("ENTRY") :].strip()
+            name = header.split()[0].lstrip("%")
+            if "(" in name:
+                name = name.split("(")[0]
+            cur = Computation(name=name, instrs=[], shapes={})
+            comps[name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(2), m.group(3)
+        # rhs = "<type> <op>(...)..."  — find op token after the type
+        type_end = 0
+        depth = 0
+        # type may contain tuple parens: scan until we hit ' <op>(' at depth 0
+        opm = re.search(r"\)?\s*([\w\-]+)\(", rhs)
+        # robust: type is everything before the op token; op token is the
+        # last word before the first '(' at nesting level of the call
+        paren = rhs.find("(")
+        if paren < 0:
+            continue
+        # walk back from a '(' that opens the operand list: the op name is
+        # the word right before it; for tuple types the first '(' is the
+        # tuple — find " <word>(" pattern with word in known op charset
+        mm = re.search(r"\s([a-z][\w\-]*)\(", rhs)
+        if not mm:
+            continue
+        op = mm.group(1)
+        type_str = rhs[: mm.start()].strip()
+        operand_str = rhs[mm.end() :]
+        # operands end at the matching ')': take up to first '), ' heuristic
+        operands = _OPERAND_RE.findall(operand_str.split(")", 1)[0])
+        cur.instrs.append(Instr(name=name, op=op, type_str=type_str, rest=rhs,
+                                operands=operands))
+        cur.shapes[name] = type_str
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Recover the scan length from the loop condition's compare constant."""
+    consts = []
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            mc = re.search(r"constant\((-?\d+)\)", ins.rest)
+            if mc:
+                consts.append(int(mc.group(1)))
+    pos = [c for c in consts if c > 0]
+    return max(pos) if pos else 1
+
+
+def _dot_flops(ins: Instr, shapes: dict) -> float:
+    out_dims = _first_shape_dims(ins.type_str)
+    out = 1
+    for d in out_dims:
+        out *= d
+    # contracting dims from the lhs operand
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+    k = 1
+    if mc and ins.operands:
+        lhs_type = shapes.get(ins.operands[0], "")
+        lhs_dims = _first_shape_dims(lhs_type)
+        for idx in mc.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                k *= lhs_dims[int(idx)]
+    return 2.0 * out * k
+
+
+@dataclasses.dataclass
+class Tally:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS}
+    )
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in COLLECTIVE_KINDS}
+    )
+
+    def add(self, other: "Tally", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in COLLECTIVE_KINDS:
+            self.collectives[k] += other.collectives[k] * mult
+            self.collective_counts[k] += int(other.collective_counts[k] * mult)
+
+
+def analyze(text: str, entry: str | None = None, top_k: int = 12) -> dict:
+    comps = parse_hlo(text)
+    if entry is None:
+        cands = [n for n in comps if "main" in n]
+        entry = cands[0] if cands else next(iter(comps))
+
+    contrib: dict = {}  # (op, shape-prefix) -> loop-multiplied bytes
+
+    def note(op, type_str, nbytes, mult):
+        key = f"{op} {type_str.split('{')[0][:70]}"
+        contrib[key] = contrib.get(key, 0.0) + nbytes * mult
+
+    def walk(name: str, mult: float, depth=0) -> Tally:
+        t = Tally()
+        comp = comps.get(name)
+        if comp is None or depth > 60:
+            return t
+        for ins in comp.instrs:
+            base_kind = ins.op.replace("-start", "")
+            if base_kind in COLLECTIVE_KINDS:
+                payload = _shape_bytes(ins.type_str)
+                t.collectives[base_kind] += payload
+                t.collective_counts[base_kind] += 1
+                t.bytes += payload
+                note(base_kind, ins.type_str, payload, mult)
+                continue
+            if ins.op == "dot":
+                t.flops += _dot_flops(ins, comp.shapes)
+                b = _shape_bytes(ins.type_str) + sum(
+                    _shape_bytes(comp.shapes.get(o, "")) for o in ins.operands
+                )
+                t.bytes += b
+                note("dot", ins.type_str, b, mult)
+                continue
+            if ins.op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                mcnd = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                if mb and mcnd and mcnd.group(1) in comps:
+                    trips = _trip_count(comps[mcnd.group(1)])
+                    t.add(walk(mb.group(1), mult * trips, depth + 1), trips)
+                continue
+            if ins.op == "fusion":
+                mfus = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+                inplace_update = 0
+                if mfus:
+                    inner = walk(mfus.group(1), mult, depth + 1)
+                    t.flops += inner.flops
+                    for k in COLLECTIVE_KINDS:
+                        t.collectives[k] += inner.collectives[k]
+                        t.collective_counts[k] += inner.collective_counts[k]
+                    # In-place loop-buffer update: a fusion whose root is a
+                    # dynamic-update-slice producing the fusion's own output
+                    # shape only MOVES the update window, not the buffer
+                    # (XLA aliases the buffer in place on TPU/CPU alike).
+                    fcomp = comps.get(mfus.group(1))
+                    if fcomp is not None:
+                        for fi in fcomp.instrs:
+                            if fi.op != "dynamic-update-slice":
+                                continue
+                            buf_b = _shape_bytes(fi.type_str)
+                            upd = min(
+                                (_shape_bytes(fcomp.shapes.get(o, ""))
+                                 for o in fi.operands if fcomp.shapes.get(o)),
+                                default=buf_b,
+                            )
+                            # drop buffer read+write, keep 2x update window
+                            inplace_update += max(2 * buf_b - 2 * upd, 0)
+                if inplace_update:
+                    b = _shape_bytes(ins.type_str) + sum(
+                        _shape_bytes(comp.shapes.get(o, "")) for o in ins.operands
+                    ) - inplace_update
+                    b = max(b, 0)
+                    t.bytes += b
+                    note("fusion(dus-inplace)", ins.type_str, b, mult)
+                    continue
+                b = _shape_bytes(ins.type_str) + sum(
+                    _shape_bytes(comp.shapes.get(o, "")) for o in ins.operands
+                )
+                t.bytes += b
+                note("fusion", ins.type_str, b, mult)
+                continue
+            if ins.op in ("conditional", "call"):
+                for m in _CALLED_RE.finditer(ins.rest):
+                    t.add(walk(m.group(1), mult, depth + 1), 1.0)
+                continue
+            if ins.op in _FREE_OPS:
+                continue
+            if ins.op in ("dynamic-slice", "gather", "slice"):
+                b = 2 * _shape_bytes(ins.type_str)
+                t.bytes += b
+                note(ins.op, ins.type_str, b, mult)
+                continue
+            if ins.op in ("dynamic-update-slice", "scatter"):
+                upd = min(
+                    (_shape_bytes(comp.shapes.get(o, "")) for o in ins.operands
+                     if comp.shapes.get(o)),
+                    default=_shape_bytes(ins.type_str),
+                )
+                b = 2 * upd
+                t.bytes += b
+                note(ins.op, ins.type_str, b, mult)
+                continue
+            b = _shape_bytes(ins.type_str) + sum(
+                _shape_bytes(comp.shapes.get(o, "")) for o in ins.operands
+            )
+            t.bytes += b
+            note(ins.op, ins.type_str, b, mult)
+        return t
+
+    t = walk(entry, 1.0)
+    top = sorted(contrib.items(), key=lambda kv: -kv[1])[:top_k]
+    return {
+        "flops": t.flops,
+        "bytes": t.bytes,
+        "collective_bytes": dict(t.collectives),
+        "collective_counts": dict(t.collective_counts),
+        "collective_total": sum(t.collectives.values()),
+        "entry": entry,
+        "n_computations": len(comps),
+        "top_bytes": [{"what": k, "gb": round(v / 1e9, 2)} for k, v in top],
+    }

@@ -1,0 +1,17 @@
+from repro.models.model import (
+    ArchConfig,
+    forward,
+    init_cache,
+    init_params,
+    decode_step,
+    param_count,
+)
+
+__all__ = [
+    "ArchConfig",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "param_count",
+]

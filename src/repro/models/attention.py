@@ -1,0 +1,154 @@
+"""GQA attention: full (train/prefill), cross (enc-dec), and cached decode.
+
+All shapes follow (B, S, H, head_dim). GQA repeats each of the n_kv KV heads
+over G = n_heads / n_kv query heads via a (B, S, Kv, G, hd) reshape — no
+materialized repeat. Softmax accumulates in f32.
+
+Decode with a sequence-sharded KV cache (SP for low-kv archs, DESIGN.md §4)
+needs no manual flash combine under pjit: the contraction and the softmax
+reductions over the sharded S axis lower to psum-style collectives via GSPMD;
+the dry-run HLO check verifies this.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense, dense_init, rope_angles
+
+NEG_INF = -1e30
+
+
+def attn_init(rng, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              bias: bool = False, dtype=jnp.float32):
+    r = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(r[0], d_model, n_heads * head_dim, bias, dtype),
+        "wk": dense_init(r[1], d_model, n_kv * head_dim, bias, dtype),
+        "wv": dense_init(r[2], d_model, n_kv * head_dim, bias, dtype),
+        "wo": dense_init(r[3], n_heads * head_dim, d_model, bias, dtype),
+    }
+
+
+def qkv(p, x, xkv, n_heads: int, n_kv: int, head_dim: int):
+    b, s = x.shape[:2]
+    skv = xkv.shape[1]
+    q = dense(p["wq"], x).reshape(b, s, n_heads, head_dim)
+    k = dense(p["wk"], xkv).reshape(b, skv, n_kv, head_dim)
+    v = dense(p["wv"], xkv).reshape(b, skv, n_kv, head_dim)
+    return q, k, v
+
+
+def gqa_scores(q, k):
+    """q (B,S,H,hd), k (B,T,Kv,hd) -> scores (B,Kv,G,S,T)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k) * (hd**-0.5)
+
+
+def gqa_out(probs, v):
+    """probs (B,Kv,G,S,T), v (B,T,Kv,hd) -> (B,S,H,hd)."""
+    b, kv, g, s, t = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, kv * g, v.shape[-1])
+
+
+def full_attention(
+    p,
+    x,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    causal: bool = True,
+    use_rope: bool = True,
+    rope_theta: float = 10000.0,
+    xkv=None,
+    positions=None,
+    q_chunk: int = 0,
+):
+    """Bidirectional/causal/cross attention over full sequences.
+
+    q_chunk > 0 enables query-chunked ("flash-lite") evaluation: the
+    (S, T) score matrix never materializes — only (q_chunk, T) tiles do —
+    bounding attention memory for 32k+ prefill (exact, not an approximation).
+    """
+    xkv = x if xkv is None else xkv
+    q, k, v = qkv(p, x, xkv, n_heads, n_kv, head_dim)
+    if use_rope:
+        pos = positions if positions is not None else jnp.arange(x.shape[1])
+        cos, sin = rope_angles(pos, head_dim, rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    b, s = x.shape[:2]
+    if q_chunk and s > q_chunk and s % q_chunk == 0:
+        out = _chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk)
+    else:
+        scores = gqa_scores(q, k).astype(jnp.float32)
+        if causal:
+            si, t = scores.shape[-2:]
+            mask = jnp.arange(t)[None, :] <= jnp.arange(si)[:, None]
+            scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = gqa_out(probs, v)
+    return dense(p["wo"], out.reshape(b, s, -1))
+
+
+def _chunked_attention(q, k, v, *, causal: bool, q_chunk: int):
+    """Exact attention with the query axis processed in chunks via scan."""
+    b, s, h, hd = q.shape
+    n_chunks = s // q_chunk
+    qc = q.reshape(b, n_chunks, q_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    t = k.shape[1]
+
+    def one(chunk_idx, q_blk):
+        scores = gqa_scores(q_blk, k).astype(jnp.float32)  # (B,Kv,G,C,T)
+        if causal:
+            qpos = chunk_idx * q_chunk + jnp.arange(q_chunk)
+            mask = jnp.arange(t)[None, :] <= qpos[:, None]
+            scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q_blk.dtype)
+        return gqa_out(probs, v)  # (B,C,H,hd)
+
+    def body(_, inp):
+        idx, q_blk = inp
+        return None, one(idx, q_blk)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n_chunks), qc))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def decode_attention(
+    p,
+    x_new,
+    cache_k,
+    cache_v,
+    pos,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    use_rope: bool = True,
+    rope_theta: float = 10000.0,
+):
+    """One-token decode. x_new (B,1,D); cache_k/v (B,S,Kv,hd); pos int32
+    scalar or (B,) per-sequence positions (tokens already in cache).
+    Returns (out (B,1,D), new_k, new_v)."""
+    b = x_new.shape[0]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q, k, v = qkv(p, x_new, x_new, n_heads, n_kv, head_dim)
+    if use_rope:
+        cos, sin = rope_angles(pos_b[:, None], head_dim, rope_theta)  # (B,1,hd/2)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    new_k = cache_k.at[jnp.arange(b), pos_b].set(k[:, 0].astype(cache_k.dtype))
+    new_v = cache_v.at[jnp.arange(b), pos_b].set(v[:, 0].astype(cache_v.dtype))
+    scores = gqa_scores(q, new_k).astype(jnp.float32)  # (B,Kv,G,1,S)
+    smax = new_k.shape[1]
+    valid = jnp.arange(smax)[None, None, None, None, :] <= pos_b[:, None, None, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x_new.dtype)
+    out = gqa_out(probs, new_v)
+    return dense(p["wo"], out.reshape(b, 1, -1)), new_k, new_v

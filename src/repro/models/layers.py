@@ -1,0 +1,97 @@
+"""Shared neural layers — pure functions over param dicts (no framework dep).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns take (rng, ...) and
+    return the dict. All inits are fan-in scaled normal.
+  * compute runs in ``cfg.compute_dtype`` (bf16 on TPU); params stored in
+    ``cfg.param_dtype``. Norms/softmax accumulate in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(rng, d_in: int, d_out: int, bias: bool = False, dtype=jnp.float32):
+    w = jax.random.normal(rng, (d_in, d_out), dtype) * (d_in**-0.5)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embedding_init(rng, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(rng, (vocab, d), dtype) * (d**-0.5)}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- MLPs
+def mlp_init(rng, d_model: int, d_ff: int, kind: str, bias: bool = False, dtype=jnp.float32):
+    r = jax.random.split(rng, 3)
+    if kind == "swiglu":
+        return {
+            "gate": dense_init(r[0], d_model, d_ff, bias, dtype),
+            "up": dense_init(r[1], d_model, d_ff, bias, dtype),
+            "down": dense_init(r[2], d_ff, d_model, bias, dtype),
+        }
+    if kind == "gelu":
+        return {
+            "fc": dense_init(r[0], d_model, d_ff, bias, dtype),
+            "proj": dense_init(r[1], d_ff, d_model, bias, dtype),
+        }
+    raise ValueError(kind)
+
+
+def mlp(p, x):
+    if "gate" in p:
+        h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+        return dense(p["down"], h)
+    return dense(p["proj"], jax.nn.gelu(dense(p["fc"], x)))
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """positions (...,) -> (cos, sin) each (..., head_dim//2) in f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array):
+    """x (..., S, H, hd); cos/sin (..., S, hd//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)

@@ -1,0 +1,572 @@
+"""Model assembly: ArchConfig -> params / forward / prefill / decode.
+
+Layers are organized into *groups* — the smallest repeating layer pattern
+(1 for homogeneous stacks, 2 for every-other-layer MoE, 8 for Jamba's
+1-attention:7-mamba interleave). Parameters for each in-group position are
+stacked over groups and the stack is traversed with ``lax.scan``, which keeps
+the HLO size O(group) instead of O(layers) — essential for the 40-cell
+dry-run compile budget.
+
+Decode carries a per-group cache pytree through the same scan (xs in, ys
+out). Attention decode dispatches on ``cfg.attention_kind``:
+  'full' — dense cached attention,
+  'taco' — TaCo retrieval attention (repro.models.taco_attention), the
+            paper's technique, giving sub-quadratic long-context decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import taco_attention as TA
+from repro.models.layers import (
+    apply_norm,
+    dense,
+    dense_init,
+    embed,
+    embedding_init,
+    mlp,
+    mlp_init,
+    norm_init,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    mlp: str = "swiglu"  # swiglu | gelu
+    qkv_bias: bool = False
+    use_rope: bool = True
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # --- MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1  # MoE FFN on layers where (i % moe_every == moe_every-1)
+    moe_dense_residual: bool = False  # arctic: dense MLP in parallel with MoE
+    dense_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # --- mixer pattern
+    mixer: str = "attn"  # attn | rwkv | hybrid (mamba+attn)
+    attn_every: int = 1  # hybrid: attention on layers where (i % attn_every == attn_pos)
+    attn_pos: int = 0
+    # --- mamba / rwkv
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    rwkv_head_dim: int = 64
+    rwkv_chunk: int = 64  # chunked WKV (0 = sequential scan)
+    # --- enc-dec / frontends
+    encoder_layers: int = 0
+    frontend: str | None = None  # audio | vlm
+    frontend_len: int = 0  # encoder frames / image patches
+    # --- execution
+    attention_kind: str = "full"  # full | taco
+    attn_q_chunk: int = 0  # 0 = auto (2048 when seq >= 8192); flash-lite tiling
+    max_positions: int = 32768  # learned-position table length (non-RoPE archs)
+    retrieval: TA.RetrievalConfig = dataclasses.field(default_factory=TA.RetrievalConfig)
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True
+    # sharding constraint specs (set by launch/sharding.py; None on bare CPU)
+    ep_spec: Any = None  # 4-D MoE buffer spec (E, chunks, cap, D)
+    act_spec: Any = None
+    moe_dispatch_chunks: int = 1  # == DP shard count for shard-local dispatch
+    moe_impl: str = "gspmd"  # gspmd | manual (shard_map local-expert dispatch)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded to a multiple of 256 so embeddings/logits shard
+        evenly over 16/32-way TP (Megatron-style padding); forward slices
+        logits back to the true vocab."""
+        v = self.vocab_size
+        return v if v % 256 == 0 else (v + 255) // 256 * 256
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def group_size(self) -> int:
+        g = 1
+        if self.mixer == "hybrid":
+            g = self.attn_every
+        if self.n_experts and self.moe_every > 1:
+            g = _lcm(g, self.moe_every)
+        return g
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.group_size == 0, (self.n_layers, self.group_size)
+        return self.n_layers // self.group_size
+
+    def layer_specs(self) -> list[dict]:
+        """Per-group sub-layer pattern."""
+        specs = []
+        for i in range(self.group_size):
+            if self.mixer == "attn":
+                mixer = "attn"
+            elif self.mixer == "rwkv":
+                mixer = "rwkv"
+            elif self.mixer == "hybrid":
+                mixer = "attn" if (i % self.attn_every == self.attn_pos) else "mamba"
+            else:
+                raise ValueError(self.mixer)
+            if self.n_experts and (i % self.moe_every == self.moe_every - 1):
+                ffn = "moe_dense" if self.moe_dense_residual else "moe"
+            elif mixer == "rwkv":
+                ffn = "channel_mix"
+            else:
+                ffn = "mlp"
+            specs.append({"mixer": mixer, "ffn": ffn})
+        return specs
+
+
+def _lcm(a, b):
+    import math
+
+    return a * b // math.gcd(a, b)
+
+
+
+
+def _moe(cfg: ArchConfig, p, h):
+    """Dispatch between the GSPMD MoE and the explicit shard_map variant.
+    The manual path needs the batch axis divisible by the DP shard count
+    (shard_map even-sharding); tiny decode batches fall back to GSPMD."""
+    if cfg.moe_impl == "manual" and h.shape[0] % max(cfg.moe_dispatch_chunks, 1) == 0:
+        dp = cfg.act_spec[0] if cfg.act_spec is not None else ("data",)
+        return M.moe_apply_manual(
+            p, h, n_experts=cfg.n_experts, experts_per_token=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor, dp_axes=dp, ep_axis="model",
+        )
+    return M.moe_apply(
+        p, h, n_experts=cfg.n_experts, experts_per_token=cfg.experts_per_token,
+        capacity_factor=cfg.capacity_factor, ep_spec=cfg.ep_spec,
+        dispatch_chunks=cfg.moe_dispatch_chunks, tok_spec=cfg.act_spec,
+    )
+
+# ============================================================== init ======
+def _init_sublayer(rng, cfg: ArchConfig, spec: dict, cross: bool = False):
+    r = jax.random.split(rng, 8)
+    dt = cfg.pdtype
+    p: dict = {}
+    if spec["mixer"] == "attn":
+        p["ln1"] = norm_init(cfg.d_model, cfg.norm, dt)
+        p["attn"] = A.attn_init(r[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.qkv_bias, dt)
+        if cross:
+            p["ln_x"] = norm_init(cfg.d_model, cfg.norm, dt)
+            p["cross"] = A.attn_init(r[5], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.qkv_bias, dt)
+    elif spec["mixer"] == "mamba":
+        p["ln1"] = norm_init(cfg.d_model, cfg.norm, dt)
+        p["mamba"] = S.mamba_init(r[0], cfg.d_model, cfg.mamba_d_state, cfg.mamba_d_conv, cfg.mamba_expand, dtype=dt)
+    elif spec["mixer"] == "rwkv":
+        p["ln1"] = norm_init(cfg.d_model, cfg.norm, dt)
+        p["rwkv"] = S.rwkv6_init(r[0], cfg.d_model, cfg.rwkv_head_dim, dtype=dt)
+
+    p["ln2"] = norm_init(cfg.d_model, cfg.norm, dt)
+    if spec["ffn"] == "mlp":
+        p["ffn"] = mlp_init(r[1], cfg.d_model, cfg.d_ff, cfg.mlp, cfg.qkv_bias, dt)
+    elif spec["ffn"] == "channel_mix":
+        p["ffn"] = S.rwkv6_channel_mix_init(r[1], cfg.d_model, cfg.d_ff, dt)
+    elif spec["ffn"] == "moe":
+        p["moe"] = M.moe_init(r[2], cfg.d_model, cfg.d_ff, cfg.n_experts, dt)
+    elif spec["ffn"] == "moe_dense":
+        p["moe"] = M.moe_init(r[2], cfg.d_model, cfg.d_ff, cfg.n_experts, dt)
+        p["ffn"] = mlp_init(r[3], cfg.d_model, cfg.dense_d_ff or cfg.d_ff, cfg.mlp, False, dt)
+    return p
+
+
+def _init_group(rng, cfg: ArchConfig, cross: bool = False):
+    specs = cfg.layer_specs()
+    rs = jax.random.split(rng, len(specs))
+    return {f"l{i}": _init_sublayer(rs[i], cfg, s, cross) for i, s in enumerate(specs)}
+
+
+def init_params(rng, cfg: ArchConfig):
+    r = jax.random.split(rng, 8)
+    dt = cfg.pdtype
+    params = {
+        "embed": embedding_init(r[0], cfg.padded_vocab, cfg.d_model, dt),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dt),
+        "lm_head": dense_init(r[1], cfg.d_model, cfg.padded_vocab, False, dt),
+    }
+    cross = cfg.encoder_layers > 0
+    group_rngs = jax.random.split(r[2], cfg.n_groups)
+    params["blocks"] = jax.vmap(lambda k: _init_group(k, cfg, cross))(group_rngs)
+    if cfg.encoder_layers > 0:
+        enc_cfg = dataclasses.replace(
+            cfg, mixer="attn", n_experts=0, n_layers=cfg.encoder_layers,
+            attn_every=1, moe_every=1, use_rope=cfg.use_rope,
+        )
+        enc_rngs = jax.random.split(r[3], cfg.encoder_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda k: _init_group(k, enc_cfg, False))(enc_rngs),
+            "norm": norm_init(cfg.d_model, cfg.norm, dt),
+            "pos": jax.random.normal(r[4], (cfg.frontend_len or 1500, cfg.d_model), dt) * 0.02,
+        }
+    if not cfg.use_rope and cfg.encoder_layers > 0:
+        params["dec_pos"] = jax.random.normal(r[5], (cfg.max_positions, cfg.d_model), dt) * 0.02
+    return params
+
+
+def param_count(params) -> int:
+    return int(sum(x.size for x in jax.tree_util.tree_leaves(params)))
+
+
+# ============================================================ forward =====
+def _apply_sublayer_seq(cfg: ArchConfig, spec, p, x, aux, *, causal=True, enc_out=None):
+    if spec["mixer"] == "attn":
+        h = apply_norm(p["ln1"], x, cfg.norm_eps)
+        qc = cfg.attn_q_chunk or (2048 if x.shape[1] >= 8192 else 0)
+        x = x + A.full_attention(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+            causal=causal, use_rope=cfg.use_rope, rope_theta=cfg.rope_theta,
+            q_chunk=qc,
+        )
+        if enc_out is not None and "cross" in p:
+            h = apply_norm(p["ln_x"], x, cfg.norm_eps)
+            x = x + A.full_attention(
+                p["cross"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                causal=False, use_rope=False, xkv=enc_out,
+            )
+    elif spec["mixer"] == "mamba":
+        h = apply_norm(p["ln1"], x, cfg.norm_eps)
+        x = x + S.mamba_seq(
+            p["mamba"], h, d_state=cfg.mamba_d_state, d_conv=cfg.mamba_d_conv,
+            expand=cfg.mamba_expand,
+        )
+    elif spec["mixer"] == "rwkv":
+        h = apply_norm(p["ln1"], x, cfg.norm_eps)
+        if cfg.rwkv_chunk and x.shape[1] % cfg.rwkv_chunk == 0:
+            x = x + S.rwkv6_time_mix_seq_chunked(p["rwkv"], h, cfg.rwkv_head_dim, cfg.rwkv_chunk)
+        else:
+            x = x + S.rwkv6_time_mix_seq(p["rwkv"], h, cfg.rwkv_head_dim)
+
+    h = apply_norm(p["ln2"], x, cfg.norm_eps)
+    if spec["ffn"] in ("mlp",):
+        x = x + mlp(p["ffn"], h)
+    elif spec["ffn"] == "channel_mix":
+        h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        x = x + S.rwkv6_channel_mix(p["ffn"], h, h_prev)
+    elif spec["ffn"] in ("moe", "moe_dense"):
+        y, a = _moe(cfg, p["moe"], h)
+        if spec["ffn"] == "moe_dense":
+            y = y + mlp(p["ffn"], h)
+        x = x + y
+        aux = aux + a
+    from repro.models.sharding_utils import constrain
+
+    return constrain(x, cfg.act_spec), aux
+
+
+def _run_stack(cfg: ArchConfig, blocks, x, *, causal=True, enc_out=None, specs=None):
+    specs = specs or cfg.layer_specs()
+
+    def body(carry, group_p):
+        xc, auxc = carry
+        for i, spec in enumerate(specs):
+            xc, auxc = _apply_sublayer_seq(
+                cfg, spec, group_p[f"l{i}"], xc, auxc, causal=causal, enc_out=enc_out
+            )
+        return (xc, auxc), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), blocks)
+    return x, aux
+
+
+def _encode(params, cfg: ArchConfig, frames):
+    """Whisper-style encoder over precomputed (stub) frame embeddings."""
+    enc = params["encoder"]
+    x = frames.astype(cfg.cdtype) + enc["pos"][None, : frames.shape[1]].astype(cfg.cdtype)
+    enc_cfg = dataclasses.replace(
+        cfg, mixer="attn", n_experts=0, attn_every=1, moe_every=1,
+        n_layers=cfg.encoder_layers,
+    )
+    specs = [{"mixer": "attn", "ffn": "mlp"}]
+    x, _ = _run_stack(enc_cfg, enc["blocks"], x, causal=False, specs=specs)
+    return apply_norm(enc["norm"], x, cfg.norm_eps)
+
+
+def forward(params, cfg: ArchConfig, batch: dict):
+    """Training/prefill forward. batch keys: 'tokens' (B,S); optional
+    'frames' (audio enc-dec) or 'patch_embeds' (vlm). Returns (logits, aux)."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens).astype(cfg.cdtype)
+    enc_out = None
+    if cfg.frontend == "audio":
+        enc_out = _encode(params, cfg, batch["frames"])
+    if cfg.frontend == "vlm":
+        patches = batch["patch_embeds"].astype(cfg.cdtype)
+        x = jnp.concatenate([patches, x], axis=1)
+    if not cfg.use_rope and "dec_pos" in params:
+        x = x + params["dec_pos"][None, : x.shape[1]].astype(cfg.cdtype)
+    x, aux = _run_stack(cfg, params["blocks"], x, causal=True, enc_out=enc_out)
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = dense(params["lm_head"], x)[..., : cfg.vocab_size]
+    if cfg.frontend == "vlm":
+        logits = logits[:, batch["patch_embeds"].shape[1] :]
+    return logits.astype(jnp.float32), aux
+
+
+# ============================================================= decode =====
+def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int, *, taco=False):
+    """Zero-initialized per-group decode cache pytree."""
+    specs = cfg.layer_specs()
+    g = cfg.n_groups
+    cdt = cfg.cdtype
+    cache: dict = {}
+    for i, spec in enumerate(specs):
+        c: dict = {}
+        if spec["mixer"] == "attn":
+            c["k"] = jnp.zeros((g, batch_size, max_seq, cfg.n_kv_heads, cfg.hd), cdt)
+            c["v"] = jnp.zeros((g, batch_size, max_seq, cfg.n_kv_heads, cfg.hd), cdt)
+            if cfg.encoder_layers > 0:
+                tenc = cfg.frontend_len or 1500
+                c["cross_k"] = jnp.zeros((g, batch_size, tenc, cfg.n_kv_heads, cfg.hd), cdt)
+                c["cross_v"] = jnp.zeros((g, batch_size, tenc, cfg.n_kv_heads, cfg.hd), cdt)
+            if taco or cfg.attention_kind == "taco":
+                rc = cfg.retrieval
+                sh = rc.subspace_dim // 2
+                c["taco"] = TA.RetrievalState(
+                    mean=jnp.zeros((g, cfg.n_kv_heads, cfg.hd), jnp.float32),
+                    basis=jnp.zeros((g, cfg.n_kv_heads, cfg.hd, rc.m), jnp.float32),
+                    centroids=jnp.zeros((g, cfg.n_kv_heads, rc.n_subspaces, 2, rc.sqrt_k, sh), jnp.float32),
+                    cells=jnp.zeros((g, batch_size, cfg.n_kv_heads, rc.n_subspaces, max_seq), jnp.int32),
+                    cell_sizes=jnp.zeros((g, batch_size, cfg.n_kv_heads, rc.n_subspaces, rc.sqrt_k, rc.sqrt_k), jnp.int32),
+                )
+        elif spec["mixer"] == "mamba":
+            din = cfg.mamba_expand * cfg.d_model
+            c["conv"] = jnp.zeros((g, batch_size, cfg.mamba_d_conv - 1, din), cdt)
+            c["h"] = jnp.zeros((g, batch_size, din, cfg.mamba_d_state), jnp.float32)
+        elif spec["mixer"] == "rwkv":
+            h = cfg.d_model // cfg.rwkv_head_dim
+            c["x_prev"] = jnp.zeros((g, batch_size, cfg.d_model), cdt)
+            c["wkv"] = jnp.zeros((g, batch_size, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32)
+        if spec["ffn"] == "channel_mix":
+            c["cm_prev"] = jnp.zeros((g, batch_size, cfg.d_model), cdt)
+        cache[f"l{i}"] = c
+    return cache
+
+
+def _apply_sublayer_step(cfg: ArchConfig, spec, p, c, x, pos, enc_out):
+    """One-token step. x (B,1,D); c = this sub-layer's cache (leading group
+    axis removed by scan). Returns (x, new_cache)."""
+    new_c = dict(c)
+    if spec["mixer"] == "attn":
+        h = apply_norm(p["ln1"], x, cfg.norm_eps)
+        if cfg.attention_kind == "taco" and "taco" in c:
+            out, nk, nv, nstate = TA.taco_decode_attention(
+                p["attn"], h, c["k"], c["v"], c["taco"], pos, cfg.retrieval,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                use_rope=cfg.use_rope, rope_theta=cfg.rope_theta,
+            )
+            new_c["taco"] = nstate
+        else:
+            out, nk, nv = A.decode_attention(
+                p["attn"], h, c["k"], c["v"], pos,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                use_rope=cfg.use_rope, rope_theta=cfg.rope_theta,
+            )
+        new_c["k"], new_c["v"] = nk, nv
+        x = x + out
+        if "cross" in p and "cross_k" in c:
+            h = apply_norm(p["ln_x"], x, cfg.norm_eps)
+            q = dense(p["cross"]["wq"], h).reshape(x.shape[0], 1, cfg.n_heads, cfg.hd)
+            scores = A.gqa_scores(q, c["cross_k"]).astype(jnp.float32)
+            probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+            out = A.gqa_out(probs, c["cross_v"]).reshape(x.shape[0], 1, -1)
+            x = x + dense(p["cross"]["wo"], out)
+    elif spec["mixer"] == "mamba":
+        h = apply_norm(p["ln1"], x, cfg.norm_eps)
+        y, (nconv, nh) = S.mamba_step(
+            p["mamba"], h[:, 0], (c["conv"], c["h"]),
+            d_state=cfg.mamba_d_state, d_conv=cfg.mamba_d_conv, expand=cfg.mamba_expand,
+        )
+        new_c["conv"], new_c["h"] = nconv, nh
+        x = x + y[:, None]
+    elif spec["mixer"] == "rwkv":
+        h = apply_norm(p["ln1"], x, cfg.norm_eps)
+        y, (nxp, nwkv) = S.rwkv6_time_mix_step(
+            p["rwkv"], h[:, 0], (c["x_prev"], c["wkv"]), cfg.rwkv_head_dim
+        )
+        new_c["x_prev"], new_c["wkv"] = nxp, nwkv
+        x = x + y[:, None]
+
+    h = apply_norm(p["ln2"], x, cfg.norm_eps)
+    if spec["ffn"] == "mlp":
+        x = x + mlp(p["ffn"], h)
+    elif spec["ffn"] == "channel_mix":
+        y = S.rwkv6_channel_mix(p["ffn"], h[:, 0], c["cm_prev"])
+        new_c["cm_prev"] = h[:, 0]
+        x = x + y[:, None]
+    elif spec["ffn"] in ("moe", "moe_dense"):
+        y, _aux = _moe(cfg, p["moe"], h)
+        if spec["ffn"] == "moe_dense":
+            y = y + mlp(p["ffn"], h)
+        x = x + y
+    return x, new_c
+
+
+def decode_step(params, cfg: ArchConfig, cache: dict, tokens: jax.Array, pos):
+    """Generate logits for one new token. tokens (B, 1); pos = #cached tokens
+    (int32 scalar, or (B,) per-sequence for batched serving).
+    Returns (logits (B,1,V), new_cache)."""
+    specs = cfg.layer_specs()
+    x = embed(params["embed"], tokens).astype(cfg.cdtype)
+    if not cfg.use_rope and "dec_pos" in params:
+        pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (tokens.shape[0],))
+        x = x + params["dec_pos"][pos_b][:, None].astype(cfg.cdtype)
+
+    def body(xc, inp):
+        group_p, group_c = inp
+        new_gc = {}
+        for i, spec in enumerate(specs):
+            xc, nc = _apply_sublayer_step(cfg, spec, group_p[f"l{i}"], group_c[f"l{i}"], xc, pos, None)
+            new_gc[f"l{i}"] = nc
+        return xc, new_gc
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = dense(params["lm_head"], x)[..., : cfg.vocab_size]
+    return logits.astype(jnp.float32), new_cache
+
+
+# ============================================================= prefill ====
+def prefill(params, cfg: ArchConfig, batch: dict, max_seq: int):
+    """Run the full prompt, returning (last logits, populated cache).
+    For attention_kind == 'taco', the TaCo retrieval index over the cached
+    keys is built here (paper Alg. 1/2/3 adapted per DESIGN.md)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    specs = cfg.layer_specs()
+    x = embed(params["embed"], tokens).astype(cfg.cdtype)
+    enc_out = None
+    if cfg.frontend == "audio":
+        enc_out = _encode(params, cfg, batch["frames"])
+    if cfg.frontend == "vlm":
+        x = jnp.concatenate([batch["patch_embeds"].astype(cfg.cdtype), x], axis=1)
+        s = x.shape[1]
+    if not cfg.use_rope and "dec_pos" in params:
+        x = x + params["dec_pos"][None, :s].astype(cfg.cdtype)
+
+    def body(xc, inp):
+        group_p, group_c = inp
+        new_gc = {}
+        for i, spec in enumerate(specs):
+            p = group_p[f"l{i}"]
+            c = dict(group_c[f"l{i}"])
+            if spec["mixer"] == "attn":
+                h = apply_norm(p["ln1"], xc, cfg.norm_eps)
+                q, k, v = A.qkv(p["attn"], h, h, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+                if cfg.use_rope:
+                    from repro.models.layers import apply_rope, rope_angles
+
+                    cos, sin = rope_angles(jnp.arange(s), cfg.hd, cfg.rope_theta)
+                    q = apply_rope(q, cos, sin)
+                    k = apply_rope(k, cos, sin)
+                qc = cfg.attn_q_chunk or (2048 if s >= 8192 else 0)
+                if qc and s % qc == 0:
+                    out = A._chunked_attention(q, k, v, causal=True, q_chunk=qc).reshape(b, s, -1)
+                else:
+                    scores = A.gqa_scores(q, k).astype(jnp.float32)
+                    mask = jnp.arange(s)[None, :] <= jnp.arange(s)[:, None]
+                    scores = jnp.where(mask, scores, A.NEG_INF)
+                    probs = jax.nn.softmax(scores, axis=-1).astype(xc.dtype)
+                    out = A.gqa_out(probs, v).reshape(b, s, -1)
+                xc = xc + dense(p["attn"]["wo"], out)
+                c["k"] = jax.lax.dynamic_update_slice(c["k"], k.astype(c["k"].dtype), (0, 0, 0, 0))
+                c["v"] = jax.lax.dynamic_update_slice(c["v"], v.astype(c["v"].dtype), (0, 0, 0, 0))
+                if "taco" in c:
+                    st = TA.build_retrieval_state(k.astype(jnp.float32), cfg.retrieval)
+                    smax = c["taco"].cells.shape[-1]
+                    pad = smax - s
+                    c["taco"] = TA.RetrievalState(
+                        mean=st.mean, basis=st.basis, centroids=st.centroids,
+                        cells=jnp.pad(st.cells, ((0, 0),) * 3 + ((0, pad),)),
+                        cell_sizes=st.cell_sizes,
+                    )
+                if enc_out is not None and "cross" in p:
+                    h = apply_norm(p["ln_x"], xc, cfg.norm_eps)
+                    qc, kc, vc = A.qkv(p["cross"], h, enc_out, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+                    sc = A.gqa_scores(qc, kc).astype(jnp.float32)
+                    pc = jax.nn.softmax(sc, axis=-1).astype(xc.dtype)
+                    oc = A.gqa_out(pc, vc).reshape(b, s, -1)
+                    xc = xc + dense(p["cross"]["wo"], oc)
+                    c["cross_k"], c["cross_v"] = kc.astype(c["cross_k"].dtype), vc.astype(c["cross_v"].dtype)
+                h2 = apply_norm(p["ln2"], xc, cfg.norm_eps)
+                xc = _ffn_seq(cfg, spec, p, xc, h2)
+            else:
+                h = apply_norm(p["ln1"], xc, cfg.norm_eps)
+                if spec["mixer"] == "mamba":
+                    y, (conv_buf, hstate) = S.mamba_seq(
+                        p["mamba"], h, d_state=cfg.mamba_d_state,
+                        d_conv=cfg.mamba_d_conv, expand=cfg.mamba_expand,
+                        return_state=True,
+                    )
+                    c["conv"], c["h"] = conv_buf.astype(c["conv"].dtype), hstate
+                else:  # rwkv
+                    if cfg.rwkv_chunk and h.shape[1] % cfg.rwkv_chunk == 0:
+                        y, (xprev, wkv) = S.rwkv6_time_mix_seq_chunked(
+                            p["rwkv"], h, cfg.rwkv_head_dim, cfg.rwkv_chunk,
+                            return_state=True,
+                        )
+                    else:
+                        y, (xprev, wkv) = S.rwkv6_time_mix_seq(
+                            p["rwkv"], h, cfg.rwkv_head_dim, return_state=True
+                        )
+                    c["x_prev"], c["wkv"] = xprev.astype(c["x_prev"].dtype), wkv
+                xc = xc + y
+                h2 = apply_norm(p["ln2"], xc, cfg.norm_eps)
+                if spec["ffn"] == "channel_mix":
+                    h_prev = jnp.pad(h2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+                    xc = xc + S.rwkv6_channel_mix(p["ffn"], h2, h_prev)
+                    c["cm_prev"] = h2[:, -1].astype(c["cm_prev"].dtype)
+                else:
+                    xc = _ffn_seq(cfg, spec, p, xc, h2)
+            new_gc[f"l{i}"] = c
+        return xc, new_gc
+
+    cache = init_cache(cfg, b, max_seq, taco=cfg.attention_kind == "taco")
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = dense(params["lm_head"], x[:, -1:])[..., : cfg.vocab_size]
+    return logits.astype(jnp.float32), new_cache
+
+
+def _ffn_seq(cfg, spec, p, x, h):
+    if spec["ffn"] == "mlp":
+        return x + mlp(p["ffn"], h)
+    if spec["ffn"] == "channel_mix":
+        h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        return x + S.rwkv6_channel_mix(p["ffn"], h, h_prev)
+    y, _ = _moe(cfg, p["moe"], h)
+    if spec["ffn"] == "moe_dense":
+        y = y + mlp(p["ffn"], h)
+    return x + y

@@ -1,0 +1,16 @@
+"""Sharding-constraint helper usable from mesh-agnostic model code."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def constrain(x, spec: P | None):
+    """Apply a sharding constraint if a mesh context is active; no-op
+    otherwise (keeps model code runnable on bare CPU in tests)."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

@@ -1,0 +1,300 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba (for Jamba).
+
+Both support two modes:
+  * ``*_seq``   — full-sequence processing via lax.scan (training / prefill),
+  * ``*_step``  — single-token recurrent step with explicit state (decode).
+Decode state is O(1) in sequence length — this is why SSM/hybrid archs run
+the long_500k cell natively (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_norm, dense, dense_init, norm_init
+
+
+# =============================================================== RWKV6 ===
+def rwkv6_init(rng, d_model: int, head_dim: int = 64, lora_rank: int = 64, dtype=jnp.float32):
+    r = jax.random.split(rng, 10)
+    n_heads = d_model // head_dim
+    return {
+        "mu": jax.random.uniform(r[0], (5, d_model), dtype),  # r,k,v,w,g token-shift mixes
+        "wr": dense_init(r[1], d_model, d_model, False, dtype),
+        "wk": dense_init(r[2], d_model, d_model, False, dtype),
+        "wv": dense_init(r[3], d_model, d_model, False, dtype),
+        "wg": dense_init(r[4], d_model, d_model, False, dtype),
+        "wo": dense_init(r[5], d_model, d_model, False, dtype),
+        "w0": jnp.full((d_model,), -2.0, dtype),  # decay base
+        "w_lora_a": jax.random.normal(r[6], (d_model, lora_rank), dtype) * (d_model**-0.5),
+        "w_lora_b": jax.random.normal(r[7], (lora_rank, d_model), dtype) * (lora_rank**-0.5),
+        "u": jax.random.normal(r[8], (n_heads, head_dim), dtype) * 0.1,  # bonus
+        "ln_x": norm_init(d_model, "rmsnorm", dtype),
+    }
+
+
+def _rwkv6_rkvwg(p, x, x_prev):
+    """Token-shift mixes + projections. x, x_prev (B, D)."""
+    mix = lambda i: x + (x_prev - x) * p["mu"][i].astype(x.dtype)
+    r = dense(p["wr"], mix(0))
+    k = dense(p["wk"], mix(1))
+    v = dense(p["wv"], mix(2))
+    xw = mix(3)
+    g = dense(p["wg"], mix(4))
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(xw)))
+    dd = jnp.tanh(xw @ p["w_lora_a"].astype(x.dtype)) @ p["w_lora_b"].astype(x.dtype)
+    w = jnp.exp(-jnp.exp((p["w0"].astype(jnp.float32) + dd.astype(jnp.float32))))
+    return r, k, v, w, g
+
+
+def _rwkv6_core(r, k, v, w, u, state):
+    """One recurrence step per head. r,k,v,w (B,H,hd); state (B,H,hd,hd).
+    y = r @ (state + u * k^T v); state' = diag(w) state + k^T v."""
+    kv = k[..., :, None] * v[..., None, :]  # (B,H,hd,hd)
+    y = jnp.einsum("bhi,bhij->bhj", r, state + u[None, :, :, None] * kv)
+    new_state = w[..., :, None] * state + kv
+    return y, new_state
+
+
+def rwkv6_time_mix_seq(p, x: jax.Array, head_dim: int, return_state: bool = False):
+    """x (B, S, D) -> (B, S, D); scan over time. With return_state, also
+    returns the decode state (x_prev (B,D), wkv (B,H,hd,hd))."""
+    b, s, d = x.shape
+    h = d // head_dim
+    x_shift = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+    def step(state, inputs):
+        xt, xprev = inputs
+        r, k, v, w, g = _rwkv6_rkvwg(p, xt, xprev)
+        rh = r.reshape(b, h, head_dim)
+        kh = k.reshape(b, h, head_dim).astype(jnp.float32)
+        vh = v.reshape(b, h, head_dim).astype(jnp.float32)
+        wh = w.reshape(b, h, head_dim)
+        y, state = _rwkv6_core(rh.astype(jnp.float32), kh, vh, wh, p["u"].astype(jnp.float32), state)
+        y = y.reshape(b, d).astype(x.dtype)
+        y = apply_norm(p["ln_x"], y) * jax.nn.silu(g)
+        return state, y
+
+    state0 = jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+    xs = (x.transpose(1, 0, 2), x_shift.transpose(1, 0, 2))
+    final_state, ys = jax.lax.scan(step, state0, xs)
+    out = dense(p["wo"], ys.transpose(1, 0, 2))
+    if return_state:
+        return out, (x[:, -1], final_state)
+    return out
+
+
+def rwkv6_time_mix_step(p, xt: jax.Array, state, head_dim: int):
+    """Decode step. xt (B, D); state = (x_prev (B,D), wkv (B,H,hd,hd))."""
+    x_prev, wkv = state
+    b, d = xt.shape
+    h = d // head_dim
+    r, k, v, w, g = _rwkv6_rkvwg(p, xt, x_prev)
+    y, wkv = _rwkv6_core(
+        r.reshape(b, h, head_dim).astype(jnp.float32),
+        k.reshape(b, h, head_dim).astype(jnp.float32),
+        v.reshape(b, h, head_dim).astype(jnp.float32),
+        w.reshape(b, h, head_dim),
+        p["u"].astype(jnp.float32),
+        wkv,
+    )
+    y = apply_norm(p["ln_x"], y.reshape(b, d).astype(xt.dtype)) * jax.nn.silu(g)
+    return dense(p["wo"], y), (xt, wkv)
+
+
+def rwkv6_channel_mix_init(rng, d_model: int, d_ff: int, dtype=jnp.float32):
+    r = jax.random.split(rng, 3)
+    return {
+        "mu": jax.random.uniform(r[0], (2, d_model), dtype),
+        "wk": dense_init(r[1], d_model, d_ff, False, dtype),
+        "wv": dense_init(r[2], d_ff, d_model, False, dtype),
+        "wr": dense_init(jax.random.fold_in(rng, 9), d_model, d_model, False, dtype),
+    }
+
+
+def rwkv6_channel_mix(p, x: jax.Array, x_prev: jax.Array):
+    """x, x_prev (B, [S,] D)."""
+    xk = x + (x_prev - x) * p["mu"][0].astype(x.dtype)
+    xr = x + (x_prev - x) * p["mu"][1].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(dense(p["wk"], xk)))
+    return jax.nn.sigmoid(dense(p["wr"], xr)) * dense(p["wv"], k)
+
+
+def rwkv6_time_mix_seq_chunked(p, x: jax.Array, head_dim: int, chunk: int = 64,
+                               return_state: bool = False):
+    """Chunked (flash-linear-attention style) WKV — mathematically equal to
+    :func:`rwkv6_time_mix_seq` but restructured for the MXU/HBM:
+
+      * r,k,v,w,g projections run VECTORIZED over (B*S, D) — one large matmul
+        each instead of S per-step (B, D) touches;
+      * the recurrence advances one CHUNK at a time: intra-chunk interactions
+        are a masked (C, C) matmul of decay-weighted r/k, cross-chunk flows
+        through the (dk, dv) state — S/C loop trips instead of S.
+
+    Numerics: decay ratios exp(cum_{t-1} - cum_tau) <= 1 are computed via the
+    bounded two-factor split with the k-side exponent clamped at +30.
+    VALIDITY BOUND: exact while the per-chunk cumulative log-decay stays
+    within the clamp (chunk * |log w| <= 30 per channel, i.e. w >= 0.63 per
+    step at chunk=64, w >= 0.39 at chunk=32); channels forgetting faster than
+    that within one chunk have their (already e^-30-scale) tails approximated.
+    Trained RWKV decays sit far inside this bound; the sequential path
+    (rwkv_chunk=0) remains exact for all regimes. Exactness is tested against
+    the sequential oracle at both moderate and fast decay.
+
+    This is the §Perf hillclimb change for the rwkv6 train cell: per-step
+    HBM traffic O(S * D * ops) -> O(S * D), loop overhead /chunk.
+    """
+    b, s, d = x.shape
+    h = d // head_dim
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    x_shift = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+    # --- vectorized projections over the whole sequence
+    mix = lambda i: x + (x_shift - x) * p["mu"][i].astype(x.dtype)
+    r = dense(p["wr"], mix(0))
+    k = dense(p["wk"], mix(1))
+    v = dense(p["wv"], mix(2))
+    xw = mix(3)
+    g = dense(p["wg"], mix(4))
+    dd = jnp.tanh(xw @ p["w_lora_a"].astype(x.dtype)) @ p["w_lora_b"].astype(x.dtype)
+    lw = -jnp.exp(p["w0"].astype(jnp.float32) + dd.astype(jnp.float32))  # log w <= 0
+
+    def heads(t):  # (B, S, D) -> (B, nc, C, H, hd)
+        return t.reshape(b, nc, chunk, h, head_dim)
+
+    rh = heads(r).astype(jnp.float32)
+    kh = heads(k).astype(jnp.float32)
+    vh = heads(v).astype(jnp.float32)
+    lwh = heads(lw)
+    u = p["u"].astype(jnp.float32)  # (H, hd)
+
+    cum = jnp.cumsum(lwh, axis=2)  # inclusive per-chunk cumulative log-decay
+    cum_prev = cum - lwh  # cum_{t-1} (0 at chunk start)
+    r_t = rh * jnp.exp(cum_prev)  # bounded <= |r|
+    k_t = kh * jnp.exp(jnp.minimum(-cum, 30.0))  # bounded two-factor split
+    k_end = kh * jnp.exp(cum[:, :, -1:, :, :] - cum)  # decay-to-chunk-end <= |k|
+
+    # intra-chunk: scores[t, tau] = sum_i r[t,i] k[tau,i] exp(cum[t-1]-cum[tau])
+    scores = jnp.einsum("bnthi,bnchi->bnhtc", r_t, k_t)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    diag = jnp.einsum("bnthi,hi,bnthi->bnth", rh, u, kh)  # bonus term
+    y_intra = jnp.einsum("bnhtc,bnchj->bnthj", scores, vh)
+    y_intra = y_intra + diag[..., None] * vh
+
+    # cross-chunk: scan over chunk states (B, H, hd_k, hd_v)
+    decay_chunk = jnp.exp(cum[:, :, -1])  # (B, nc, H, hd)
+    kv_chunk = jnp.einsum("bnthi,bnthj->bnhij", k_end, vh)
+
+    def body(state, inp):
+        r_tc, dchunk, kvc = inp  # (B,C,H,hd), (B,H,hd), (B,H,hd,hd)
+        y_cross = jnp.einsum("bthi,bhij->bthj", r_tc, state)
+        new_state = dchunk[..., None] * state + kvc
+        return new_state, y_cross
+
+    state0 = jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+    xs = (
+        r_t.transpose(1, 0, 2, 3, 4),
+        decay_chunk.transpose(1, 0, 2, 3),
+        kv_chunk.transpose(1, 0, 2, 3, 4),
+    )
+    final_state, y_cross = jax.lax.scan(body, state0, xs)
+    y = y_intra + y_cross.transpose(1, 0, 2, 3, 4)  # (B, nc, C, H, hd)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = apply_norm(p["ln_x"], y) * jax.nn.silu(g)
+    out = dense(p["wo"], y)
+    if return_state:
+        return out, (x[:, -1], final_state)
+    return out
+
+
+# ================================================================ Mamba ===
+def mamba_init(rng, d_model: int, d_state: int = 16, d_conv: int = 4,
+               expand: int = 2, dt_rank: int | None = None, dtype=jnp.float32):
+    din = expand * d_model
+    dt_rank = dt_rank or max(1, d_model // 16)
+    r = jax.random.split(rng, 7)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :], (din, 1))
+    return {
+        "in_proj": dense_init(r[0], d_model, 2 * din, False, dtype),
+        "conv_w": jax.random.normal(r[1], (d_conv, din), dtype) * (d_conv**-0.5),
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": dense_init(r[2], din, dt_rank + 2 * d_state, False, dtype),
+        "dt_proj": dense_init(r[3], dt_rank, din, True, dtype),
+        "a_log": jnp.log(a),
+        "d": jnp.ones((din,), dtype),
+        "out_proj": dense_init(r[4], din, d_model, False, dtype),
+    }
+
+
+def _mamba_ssm_params(p, x, dt_rank: int, d_state: int):
+    """x (..., din) -> (dt (...,din), B (...,N), C (...,N))."""
+    proj = dense(p["x_proj"], x)
+    dt_low = proj[..., :dt_rank]
+    b_mat = proj[..., dt_rank : dt_rank + d_state].astype(jnp.float32)
+    c_mat = proj[..., dt_rank + d_state :].astype(jnp.float32)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt_low).astype(jnp.float32))
+    return dt, b_mat, c_mat
+
+
+def _mamba_step_core(p, xt, dt, b_mat, c_mat, h):
+    """Selective-scan step: xt/dt (B,din), b/c (B,N), h (B,din,N)."""
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (din, N)
+    da = jnp.exp(dt[..., None] * a[None])  # (B,din,N)
+    h = da * h + (dt * xt.astype(jnp.float32))[..., None] * b_mat[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_mat) + p["d"].astype(jnp.float32) * xt.astype(jnp.float32)
+    return y, h
+
+
+def mamba_seq(p, x: jax.Array, *, d_state: int = 16, d_conv: int = 4,
+              expand: int = 2, dt_rank: int | None = None, return_state: bool = False):
+    """x (B, S, D) -> (B, S, D). Causal depthwise conv + selective scan.
+    With return_state, also returns (conv_buf (B, d_conv-1, din), h)."""
+    b, s, d = x.shape
+    din = expand * d
+    dt_rank = dt_rank or max(1, d // 16)
+    xz = dense(p["in_proj"], x)
+    xraw, z = xz[..., :din], xz[..., din:]
+    # causal depthwise conv over time
+    xpad = jnp.pad(xraw, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    conv = sum(
+        xpad[:, i : i + s] * p["conv_w"][i].astype(x.dtype) for i in range(d_conv)
+    ) + p["conv_b"].astype(x.dtype)
+    xi = jax.nn.silu(conv)
+    dt, b_mat, c_mat = _mamba_ssm_params(p, xi, dt_rank, d_state)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        y, h = _mamba_step_core(p, xt, dtt, bt, ct, h)
+        return h, y
+
+    h0 = jnp.zeros((b, din, d_state), jnp.float32)
+    xs = (xi.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          b_mat.transpose(1, 0, 2), c_mat.transpose(1, 0, 2))
+    final_h, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2).astype(x.dtype) * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)
+    if return_state:
+        conv_buf = xpad[:, s : s + d_conv - 1]  # last d_conv-1 raw inputs
+        return out, (conv_buf, final_h)
+    return out
+
+
+def mamba_step(p, xt: jax.Array, state, *, d_state: int = 16, d_conv: int = 4,
+               expand: int = 2, dt_rank: int | None = None):
+    """Decode step. xt (B, D); state = (conv_buf (B, d_conv-1, din), h (B,din,N))."""
+    conv_buf, h = state
+    b, d = xt.shape
+    din = expand * d
+    dt_rank = dt_rank or max(1, d // 16)
+    xz = dense(p["in_proj"], xt)
+    xi, z = xz[..., :din], xz[..., din:]
+    window = jnp.concatenate([conv_buf, xi[:, None, :]], axis=1)  # (B, d_conv, din)
+    conv = jnp.einsum("bcd,cd->bd", window.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(conv).astype(xt.dtype)
+    dt, b_mat, c_mat = _mamba_ssm_params(p, xc, dt_rank, d_state)
+    y, h = _mamba_step_core(p, xc, dt, b_mat, c_mat, h)
+    y = y.astype(xt.dtype) * jax.nn.silu(z)
+    return dense(p["out_proj"], y), (window[:, 1:], h)

@@ -1,0 +1,267 @@
+"""TaCo retrieval attention — the paper's technique as sparse long-context
+decode (RetrievalAttention/PQCache style, paper §5.4.3).
+
+Per (layer, kv-head), cached keys are TaCo-indexed in key space (head_dim):
+entropy-averaged eigenbasis -> N_s subspaces -> per-half K-means IMI.
+Each decode step:
+  1. transform the query head into the subspaces,
+  2. sort-based activation (repro.core.activation) gives per-subspace taus,
+  3. SC-scores over all cached slots (one cell-id gather + compare per
+     subspace),
+  4. top-C selection by (SC, -distance-proxy) with the recent window force-
+     included via a key boost (no duplicate slots, softmax stays exact),
+  5. exact attention over the C gathered K/V rows.
+
+Cost per step: O(S * N_s) score work + O(C * head_dim) attention instead of
+O(S * head_dim) — sub-quadratic total decode for any attention arch.
+
+JIT adaptations (DESIGN.md §2): eigenvector allocation inside jit uses the
+static *boustrophedon* (snake) order — the value-independent approximation of
+Alg. 2's greedy (exact greedy needs host-side data-dependent control flow and
+is used for offline corpus indexing). K-means uses strided-sample init, t
+Lloyd iterations, all inside the prefill compile unit.
+
+Exactness property (tested): with n_retrieve >= valid cache length the result
+equals full decode attention bit-for-bit up to accumulation order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.activation import sort_activation
+from repro.models.layers import apply_rope, dense, rope_angles
+from repro.utils import pairwise_sq_dists, register_pytree_dataclass
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalConfig:
+    n_subspaces: int = 2
+    subspace_dim: int = 8  # must be even (split into two IMI halves)
+    sqrt_k: int = 64  # sqrt(K) centroids per half
+    alpha: float = 0.02  # collision ratio over cached tokens
+    n_retrieve: int = 1024  # C — retrieved slots per head
+    recent_window: int = 128  # always-attended recency slots
+    kmeans_iters: int = 5
+
+    @property
+    def m(self) -> int:
+        return self.n_subspaces * self.subspace_dim
+
+
+@register_pytree_dataclass
+@dataclasses.dataclass(frozen=True)
+class RetrievalState:
+    """TaCo index over one layer's KV cache. S = cache capacity.
+
+    The two IMI half-assignments are CONSOLIDATED into one cell id
+    (a1 * sqrt_k + a2) — one gather against the flattened per-query
+    cell-sum table instead of two (+add) at score time; halves the
+    index-read traffic (§Perf llava long_500k iteration 2)."""
+
+    mean: jax.Array  # (Kv, hd)
+    basis: jax.Array  # (Kv, hd, m)
+    centroids: jax.Array  # (Kv, N_s, 2, sqrt_k, s/2)
+    cells: jax.Array  # (B, Kv, N_s, S) int32: a1 * sqrt_k + a2
+    cell_sizes: jax.Array  # (B, Kv, N_s, sqrt_k, sqrt_k) int32
+
+
+def snake_allocation(m: int, n_subspaces: int) -> jnp.ndarray:
+    """Static boustrophedon allocation: eig ranks -> subspace buckets.
+    Returns (m,) int32: position i (descending eigenvalue) maps to column
+    order such that bucket j holds columns [j*s, (j+1)*s)."""
+    s = m // n_subspaces
+    cols = [[] for _ in range(n_subspaces)]
+    order = list(range(n_subspaces))
+    for rank in range(m):
+        rnd, pos = divmod(rank, n_subspaces)
+        bucket = order[pos] if rnd % 2 == 0 else order[n_subspaces - 1 - pos]
+        cols[bucket].append(rank)
+    flat = [r for bucket in cols for r in bucket]
+    return jnp.asarray(flat, jnp.int32)
+
+
+def _fit_basis(keys_flat: jax.Array, rcfg: RetrievalConfig):
+    """keys_flat (T, hd) -> (mean (hd,), basis (hd, m)) — entropy-averaged
+    (snake-allocated) top-m eigenbasis of the key covariance."""
+    t = keys_flat.shape[0]
+    mean = jnp.mean(keys_flat, axis=0)
+    xc = (keys_flat - mean).astype(jnp.float32)
+    cov = xc.T @ xc / jnp.maximum(t - 1, 1)
+    eigvals, eigvecs = jnp.linalg.eigh(cov)  # ascending
+    desc = eigvecs[:, ::-1][:, : rcfg.m]  # (hd, m) top-m descending
+    alloc = snake_allocation(rcfg.m, rcfg.n_subspaces)
+    return mean, desc[:, alloc]
+
+
+def _lloyd_fixed(data: jax.Array, sqrt_k: int, iters: int):
+    """Deterministic K-means: strided-sample init + ``iters`` Lloyd steps.
+    data (T, sh) -> centroids (sqrt_k, sh)."""
+    t = data.shape[0]
+    stride = jnp.maximum(t // sqrt_k, 1)
+    init = data[(jnp.arange(sqrt_k) * stride) % t]
+
+    def body(_, c):
+        d = pairwise_sq_dists(data, c)
+        a = jnp.argmin(d, axis=1)
+        sums = jax.ops.segment_sum(data, a, num_segments=sqrt_k)
+        cnt = jax.ops.segment_sum(jnp.ones(t, jnp.float32), a, num_segments=sqrt_k)
+        return jnp.where(cnt[:, None] > 0, sums / jnp.maximum(cnt, 1.0)[:, None], c)
+
+    return jax.lax.fori_loop(0, iters, body, init)
+
+
+def _subspace_views(tk: jax.Array, rcfg: RetrievalConfig):
+    """tk (..., m) -> (..., N_s, 2, s/2) half-split subspace views."""
+    s = rcfg.subspace_dim
+    shaped = tk.reshape(*tk.shape[:-1], rcfg.n_subspaces, 2, s // 2)
+    return shaped
+
+
+def build_retrieval_state(keys: jax.Array, rcfg: RetrievalConfig) -> RetrievalState:
+    """Prefill-time index build. keys (B, S, Kv, hd) — all S slots valid."""
+    b, s_len, kv, hd = keys.shape
+    flat = keys.transpose(2, 0, 1, 3).reshape(kv, b * s_len, hd)
+    mean, basis = jax.vmap(lambda kf: _fit_basis(kf, rcfg))(flat)
+
+    tk = jnp.einsum("ktd,kdm->ktm", flat - mean[:, None, :], basis)  # (Kv, T, m)
+    views = _subspace_views(tk, rcfg)  # (Kv, T, N_s, 2, sh)
+    views = views.transpose(0, 2, 3, 1, 4)  # (Kv, N_s, 2, T, sh)
+
+    lloyd = lambda d: _lloyd_fixed(d, rcfg.sqrt_k, rcfg.kmeans_iters)
+    centroids = jax.vmap(jax.vmap(jax.vmap(lloyd)))(views)  # (Kv, N_s, 2, sqrt_k, sh)
+
+    def assign(d, c):
+        return jnp.argmin(pairwise_sq_dists(d, c), axis=1).astype(jnp.int32)
+
+    a = jax.vmap(jax.vmap(jax.vmap(assign)))(views, centroids)  # (Kv, N_s, 2, T)
+    a = a.reshape(kv, rcfg.n_subspaces, 2, b, s_len).transpose(3, 0, 1, 2, 4)
+    a1, a2 = a[:, :, :, 0], a[:, :, :, 1]  # (B, Kv, N_s, S)
+
+    cell = a1 * rcfg.sqrt_k + a2
+    oneh = jax.nn.one_hot(cell, rcfg.sqrt_k * rcfg.sqrt_k, dtype=jnp.int32)
+    sizes = oneh.sum(axis=3).reshape(b, kv, rcfg.n_subspaces, rcfg.sqrt_k, rcfg.sqrt_k)
+    return RetrievalState(
+        mean=mean, basis=basis, centroids=centroids,
+        cells=cell, cell_sizes=sizes,
+    )
+
+
+def _transform_heads(x: jax.Array, mean: jax.Array, basis: jax.Array):
+    """x (B, Kv, ..., hd) with per-kv-head mean/basis -> (B, Kv, ..., m)."""
+    return jnp.einsum("bk...d,kdm->bk...m", x - mean[None, :, None, :], basis)
+
+
+def taco_decode_attention(
+    p,
+    x_new: jax.Array,  # (B, 1, D)
+    cache_k: jax.Array,  # (B, S, Kv, hd)
+    cache_v: jax.Array,
+    state: RetrievalState,
+    pos,  # scalar int32: number of valid cached tokens
+    rcfg: RetrievalConfig,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    use_rope: bool = True,
+    rope_theta: float = 10000.0,
+):
+    """One-token decode with TaCo-retrieved sparse attention.
+    Returns (out (B,1,D), new_cache_k, new_cache_v, new_state)."""
+    b = x_new.shape[0]
+    s_max = cache_k.shape[1]
+    g = n_heads // n_kv
+    q = dense(p["wq"], x_new).reshape(b, 1, n_heads, head_dim)
+    k = dense(p["wk"], x_new).reshape(b, 1, n_kv, head_dim)
+    v = dense(p["wv"], x_new).reshape(b, 1, n_kv, head_dim)
+    if use_rope:
+        posv = jnp.full((1,), pos)
+        cos, sin = rope_angles(posv, head_dim, rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    new_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+
+    # --- index-maintain: assign the new key into IMI cells (streaming insert)
+    tk_new = _transform_heads(k.transpose(0, 2, 1, 3), state.mean, state.basis)  # (B,Kv,1,m)
+    views = _subspace_views(tk_new[:, :, 0], rcfg)  # (B, Kv, N_s, 2, sh)
+    d_new = jnp.sum(
+        (views[:, :, :, :, None, :] - state.centroids[None]) ** 2, axis=-1
+    )  # (B, Kv, N_s, 2, sqrt_k)
+    a_new = jnp.argmin(d_new, axis=-1).astype(jnp.int32)  # (B, Kv, N_s, 2)
+    a1n, a2n = a_new[..., 0], a_new[..., 1]
+    cell_n = a1n * rcfg.sqrt_k + a2n
+    new_cells = jax.lax.dynamic_update_index_in_dim(state.cells, cell_n, pos, axis=3)
+    bidx = jnp.arange(b)[:, None, None]
+    kidx = jnp.arange(n_kv)[None, :, None]
+    sidx = jnp.arange(rcfg.n_subspaces)[None, None, :]
+    new_sizes = state.cell_sizes.at[bidx, kidx, sidx, a1n, a2n].add(1)
+    new_state = RetrievalState(
+        mean=state.mean, basis=state.basis, centroids=state.centroids,
+        cells=new_cells, cell_sizes=new_sizes,
+    )
+
+    # --- query-side TaCo: per-subspace centroid distances + activation taus
+    tq = _transform_heads(
+        q.reshape(b, 1, n_kv, g, head_dim)[:, 0], state.mean, state.basis
+    )  # (B, Kv, G, m)
+    qviews = _subspace_views(tq, rcfg)  # (B, Kv, G, N_s, 2, sh)
+    dq = jnp.sum(
+        (qviews[:, :, :, :, :, None, :] - state.centroids[None, :, None]) ** 2, axis=-1
+    )  # (B, Kv, G, N_s, 2, sqrt_k)
+    d1, d2 = dq[..., 0, :], dq[..., 1, :]  # (B, Kv, G, N_s, sqrt_k)
+    alpha_n = rcfg.alpha * (jnp.asarray(pos, jnp.float32) + 1.0)
+    sizes_b = jnp.broadcast_to(
+        new_sizes[:, :, None], (b, n_kv, g, rcfg.n_subspaces, rcfg.sqrt_k, rcfg.sqrt_k)
+    )
+    tau, _ = jax.vmap(jax.vmap(jax.vmap(jax.vmap(
+        lambda dd1, dd2, sz: sort_activation(dd1, dd2, sz, alpha_n)
+    ))))(d1, d2, sizes_b)  # (B, Kv, G, N_s)
+
+    # --- SC-scores + distance-proxy tie-break over all cache slots:
+    # ONE gather against the flattened (sqrt_k^2,) cell-sum table per
+    # (head, subspace) — the consolidated cell ids halve index traffic.
+    table = (d1[..., :, None] + d2[..., None, :]).reshape(
+        *d1.shape[:-1], rcfg.sqrt_k * rcfg.sqrt_k
+    )  # (B, Kv, G, N_s, K)
+    cells_all = new_cells[:, :, None]  # (B, Kv, 1, N_s, S)
+    sums = jnp.take_along_axis(
+        table[..., None, :], cells_all[..., None], axis=-1
+    )[..., 0]  # (B, Kv, G, N_s, S)
+    sc = jnp.sum(sums <= tau[..., None], axis=3).astype(jnp.float32)  # (B,Kv,G,S)
+    proxy = jnp.sum(sums, axis=3)
+    proxy = proxy / (jnp.max(proxy, axis=-1, keepdims=True) + 1.0)
+    key = sc - proxy
+    slot = jnp.arange(s_max)
+    valid = slot[None, None, None, :] <= pos
+    recent = slot[None, None, None, :] > (pos - rcfg.recent_window)
+    key = jnp.where(valid & recent, key + 1e4, key)  # force recency window in
+    key = jnp.where(valid, key, NEG_INF)
+
+    c = min(rcfg.n_retrieve, s_max)
+    _, top_idx = jax.lax.top_k(key, c)  # (B, Kv, G, C)
+
+    # --- gather K/V rows and attend exactly over them (bf16 payloads; the
+    # softmax accumulates in f32 — §Perf llava long_500k iteration)
+    ck = new_k.transpose(0, 2, 1, 3)  # (B, Kv, S, hd)
+    cv = new_v.transpose(0, 2, 1, 3)
+    gk = jnp.take_along_axis(ck[:, :, None], top_idx[..., None], axis=3)  # (B,Kv,G,C,hd)
+    gv = jnp.take_along_axis(cv[:, :, None], top_idx[..., None], axis=3)
+    qg = q.reshape(b, 1, n_kv, g, head_dim).transpose(0, 2, 3, 1, 4).astype(gk.dtype)
+    scores = jnp.einsum(
+        "bkgsd,bkgcd->bkgsc", qg, gk, preferred_element_type=jnp.float32
+    ) * (head_dim**-0.5)
+    sel_valid = jnp.take_along_axis(
+        jnp.broadcast_to(valid, key.shape), top_idx, axis=-1
+    )[..., None, :]
+    scores = jnp.where(sel_valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x_new.dtype)
+    out = jnp.einsum("bkgsc,bkgcd->bkgsd", probs, gv)  # (B,Kv,G,1,hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, n_heads * head_dim)
+    return dense(p["wo"], out), new_k, new_v, new_state

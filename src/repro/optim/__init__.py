@@ -1,0 +1,17 @@
+from repro.optim.adamw import adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.schedule import constant_lr, warmup_cosine
+from repro.optim.compression import compressed_psum, dequantize_int8, quantize_int8
+
+__all__ = [
+    "adamw",
+    "adafactor",
+    "clip_by_global_norm",
+    "compressed_psum",
+    "constant_lr",
+    "dequantize_int8",
+    "global_norm",
+    "quantize_int8",
+    "warmup_cosine",
+]

@@ -1,0 +1,79 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moments.
+
+For matrices the (r, c) second-moment factors replace the full v tensor:
+memory per matrix param drops from O(rc) to O(r + c). This is what makes the
+480B-class archs (arctic, jamba-large) trainable within v5e HBM at 256-512
+chips (DESIGN.md §4 memory budget). No first moment (momentum-free variant),
+update clipping at RMS 1.0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import register_pytree_dataclass
+
+
+@register_pytree_dataclass
+@dataclasses.dataclass(frozen=True)
+class AdafactorState:
+    step: jax.Array
+    vr: Any  # row factors (or full v for <2D params)
+    vc: Any  # col factors (or None sentinel zeros)
+
+
+def _is_factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor(decay: float = 0.8, eps: float = 1e-30, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0):
+    def init(params):
+        def vr0(p):
+            if _is_factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc0(p):
+            if _is_factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            vr=jax.tree.map(vr0, params),
+            vc=jax.tree.map(vc0, params),
+        )
+
+    def update(grads, state: AdafactorState, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t**-decay  # increasing decay schedule
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _is_factored(p):
+                vr2 = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc2 = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                r = vr2 / jnp.maximum(jnp.mean(vr2, axis=-1, keepdims=True), eps)
+                u = g * jax.lax.rsqrt(r[..., None]) * jax.lax.rsqrt(
+                    jnp.maximum(vc2, eps)
+                )[..., None, :]
+            else:
+                vr2 = beta * vr + (1 - beta) * g2
+                vc2 = vc
+                u = g * jax.lax.rsqrt(jnp.maximum(vr2, eps))
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            u = -lr * (u + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype), vr2, vc2
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        tup = lambda i: jax.tree.map(lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        return tup(0), AdafactorState(step=step, vr=tup(1), vc=tup(2))
+
+    return init, update

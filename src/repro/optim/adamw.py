@@ -1,0 +1,56 @@
+"""AdamW — decoupled weight decay Adam, pytree-native, optax-style interface.
+
+An optimizer is a pair (init(params) -> state, update(grads, state, params,
+lr) -> (updates, state)). Updates are ADDED to params by the caller.
+m/v moments live in f32 regardless of param dtype (bf16-param safe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import register_pytree_dataclass
+
+
+@register_pytree_dataclass
+@dataclasses.dataclass(frozen=True)
+class AdamWState:
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state: AdamWState, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            u = -lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, AdamWState(step=step, m=m, v=v)
+
+    return init, update

@@ -1,0 +1,135 @@
+"""Batched serving engine — slot-based continuous batching (lite).
+
+A fixed pool of `batch_slots` sequences decodes in lock-step; finished slots
+are refilled from the pending queue and re-prefilled individually (prefill
+compiles once per padded prompt-length bucket). Per-slot positions are
+per-sequence (the decode path supports (B,) pos vectors), so slots at
+different depths coexist in one decode batch — the core of continuous
+batching without the paged-KV machinery.
+
+greedy or temperature sampling; EOS or max_new_tokens terminate a slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import ArchConfig, decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: int | None = None
+
+
+def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return ((n + 1023) // 1024) * 1024
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ArchConfig, *, max_seq: int = 512,
+                 batch_slots: int = 4, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.max_seq = max_seq
+        self.slots = batch_slots
+        self._rng = np.random.default_rng(seed)
+        self._decode = jax.jit(partial(decode_step, cfg=cfg))
+        self._prefill_cache = {}
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill_cache:
+            cfg, max_seq = self.cfg, self.max_seq
+
+            @jax.jit
+            def fn(params, tokens):
+                return prefill(params, cfg, {"tokens": tokens}, max_seq)
+
+            self._prefill_cache[plen] = fn
+        return self._prefill_cache[plen]
+
+    def generate(self, requests: list[Request]) -> list[list[int]]:
+        """Serve all requests; returns generated token lists (per request)."""
+        cfg = self.cfg
+        results: list[list[int] | None] = [None] * len(requests)
+        queue = list(range(len(requests)))
+        b = self.slots
+
+        cache = init_cache(cfg, b, self.max_seq)
+        pos = np.zeros(b, np.int32)  # next write position per slot
+        remaining = np.zeros(b, np.int32)
+        req_of_slot = [-1] * b
+        last_tok = np.zeros((b, 1), np.int32)
+        gen: list[list[int]] = [[] for _ in range(b)]
+
+        def fill_slot(slot: int):
+            if not queue:
+                req_of_slot[slot] = -1
+                remaining[slot] = 0
+                return
+            ridx = queue.pop(0)
+            req = requests[ridx]
+            plen = len(req.prompt)
+            toks = np.asarray(req.prompt, np.int32)[None, :]
+            logits, pc = self._prefill_fn(plen)(self.params, jnp.asarray(toks))
+            # splice this sequence's prefill cache into the batch cache
+            nonlocal cache
+            cache = _splice_cache(cache, pc, slot)
+            tok = int(jnp.argmax(logits[0, -1]))
+            req_of_slot[slot] = ridx
+            pos[slot] = plen
+            remaining[slot] = req.max_new_tokens - 1
+            last_tok[slot, 0] = tok
+            gen[slot] = [tok]
+
+        for s in range(b):
+            fill_slot(s)
+
+        while any(r >= 0 for r in req_of_slot):
+            logits, cache = self._decode(
+                self.params, cache=cache, tokens=jnp.asarray(last_tok),
+                pos=jnp.asarray(pos),
+            )
+            logits = np.asarray(logits[:, 0])
+            for s in range(b):
+                if req_of_slot[s] < 0:
+                    continue
+                req = requests[req_of_slot[s]]
+                if req.temperature > 0:
+                    z = logits[s] / req.temperature
+                    z = z - z.max()
+                    p = np.exp(z) / np.exp(z).sum()
+                    tok = int(self._rng.choice(len(p), p=p))
+                else:
+                    tok = int(np.argmax(logits[s]))
+                pos[s] += 1
+                gen[s].append(tok)
+                remaining[s] -= 1
+                done = remaining[s] <= 0 or (req.eos_id is not None and tok == req.eos_id)
+                if done or pos[s] >= self.max_seq - 1:
+                    results[req_of_slot[s]] = gen[s]
+                    fill_slot(s)
+                else:
+                    last_tok[s, 0] = tok
+        return [r if r is not None else [] for r in results]
+
+
+def _splice_cache(batch_cache, single_cache, slot: int):
+    """Copy sequence-0 of `single_cache` into `slot` of `batch_cache`.
+    Handles ragged leading (group) axes uniformly: the batch axis is axis 1
+    for grouped leaves (g, b, ...)."""
+
+    def splice(bc, sc):
+        return bc.at[:, slot].set(sc[:, 0].astype(bc.dtype))
+
+    return jax.tree.map(splice, batch_cache, single_cache)

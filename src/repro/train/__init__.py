@@ -1,0 +1,4 @@
+from repro.train.losses import cross_entropy
+from repro.train.loop import TrainState, make_train_step, train_state_init
+
+__all__ = ["TrainState", "cross_entropy", "make_train_step", "train_state_init"]

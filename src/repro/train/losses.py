@@ -1,0 +1,21 @@
+"""Training losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IGNORE = -100
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, z_loss: float = 1e-4):
+    """Next-token CE with ignore-index masking and optional z-loss.
+    logits (B, S, V) f32; labels (B, S) int32 (IGNORE = masked)."""
+    mask = (labels != IGNORE).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    if z_loss:
+        loss = loss + z_loss * jnp.sum((lse * mask) ** 2) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss

@@ -1,0 +1,20 @@
+import numpy as np
+import pytest
+
+from repro.data import gmm_dataset, make_queries
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    """Shared small ANN dataset: (data (~8k, 64), queries (16, 64), gt ids)."""
+    from repro.utils import exact_knn
+
+    data0 = gmm_dataset(8192, 64, seed=0)
+    data, queries = make_queries(data0, 16)
+    gt_d, gt_i = exact_knn(data, queries, 10)
+    return data, queries, gt_i, gt_d
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,133 @@
+"""Equivalence + property tests for the three activation implementations
+(sort-based TPU-native SDA, faithful min-heap Alg. 4, linear DA baseline)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.activation import (
+    heap_activation,
+    linear_activation,
+    sort_activation,
+)
+from repro.core.heap import heap_make, heap_pop, heap_push, heap_top
+
+
+def _reference_activation(d1, d2, sizes, alpha_n):
+    """Oracle: full enumeration of cells in ascending sum order."""
+    sqrt_k = len(d1)
+    sums = (d1[:, None] + d2[None, :]).reshape(-1)
+    order = np.argsort(sums, kind="stable")
+    csum = np.cumsum(sizes.reshape(-1)[order])
+    target = min(alpha_n, csum[-1])
+    cut = int(np.argmax(csum >= target))
+    return float(sums[order[cut]]), float(csum[cut])
+
+
+def _random_case(rng, sqrt_k, n):
+    d1 = rng.uniform(0, 10, sqrt_k).astype(np.float32)
+    d2 = rng.uniform(0, 10, sqrt_k).astype(np.float32)
+    a1 = rng.integers(0, sqrt_k, n)
+    a2 = rng.integers(0, sqrt_k, n)
+    sizes = np.zeros((sqrt_k, sqrt_k), np.int32)
+    np.add.at(sizes, (a1, a2), 1)
+    return d1, d2, sizes
+
+
+@pytest.mark.parametrize("fn", [sort_activation, heap_activation, linear_activation])
+@pytest.mark.parametrize("sqrt_k", [4, 16, 32])
+def test_matches_reference(fn, sqrt_k):
+    rng = np.random.default_rng(sqrt_k)
+    for trial in range(5):
+        d1, d2, sizes = _random_case(rng, sqrt_k, 500)
+        alpha_n = float(rng.uniform(1, 400))
+        tau_ref, ret_ref = _reference_activation(d1, d2, sizes, alpha_n)
+        tau, ret = jax.jit(fn)(jnp.asarray(d1), jnp.asarray(d2), jnp.asarray(sizes), alpha_n)
+        assert float(ret) == pytest.approx(ret_ref)
+        assert float(tau) == pytest.approx(tau_ref, rel=1e-5)
+
+
+def test_three_implementations_agree():
+    rng = np.random.default_rng(7)
+    d1, d2, sizes = _random_case(rng, 16, 2000)
+    for alpha_n in (10.0, 100.0, 1000.0, 5000.0):
+        outs = [
+            jax.jit(f)(jnp.asarray(d1), jnp.asarray(d2), jnp.asarray(sizes), alpha_n)
+            for f in (sort_activation, heap_activation, linear_activation)
+        ]
+        taus = [float(t) for t, _ in outs]
+        rets = [float(r) for _, r in outs]
+        assert max(taus) - min(taus) < 1e-5 * max(1.0, max(taus))
+        assert max(rets) == min(rets)
+
+
+def test_retrieved_meets_alpha_n():
+    """Activated cells must cover at least alpha*n points (early-termination
+    correctness) while activating no more than one extra cell."""
+    rng = np.random.default_rng(11)
+    d1, d2, sizes = _random_case(rng, 16, 3000)
+    alpha_n = 300.0
+    tau, ret = sort_activation(jnp.asarray(d1), jnp.asarray(d2), jnp.asarray(sizes), alpha_n)
+    assert float(ret) >= alpha_n
+    # removing the threshold cell must drop below alpha_n
+    sums = d1[:, None] + d2[None, :]
+    mask = sums <= float(tau)
+    below = sums < float(tau)
+    assert sizes[below].sum() < alpha_n <= sizes[mask].sum()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(2, 12),
+    st.integers(1, 5000),
+    st.integers(0, 2**31 - 1),
+)
+def test_property_sort_activation(sqrt_k, alpha_n, seed):
+    rng = np.random.default_rng(seed)
+    d1, d2, sizes = _random_case(rng, sqrt_k, 800)
+    tau_ref, ret_ref = _reference_activation(d1, d2, sizes, float(alpha_n))
+    tau, ret = sort_activation(
+        jnp.asarray(d1), jnp.asarray(d2), jnp.asarray(sizes), float(alpha_n)
+    )
+    assert float(ret) == pytest.approx(ret_ref)
+    assert float(tau) == pytest.approx(tau_ref, rel=1e-5)
+
+
+class TestHeap:
+    def test_push_pop_sorted(self):
+        rng = np.random.default_rng(0)
+        keys = rng.uniform(0, 1, 31).astype(np.float32)
+
+        @jax.jit
+        def run(ks):
+            h = heap_make(33)
+            for i in range(31):
+                h = heap_push(h, ks[i], i)
+            out = []
+            for _ in range(31):
+                k, v = heap_top(h)
+                out.append(k)
+                h = heap_pop(h)
+            return jnp.stack(out)
+
+        out = np.asarray(run(jnp.asarray(keys)))
+        np.testing.assert_allclose(out, np.sort(keys), rtol=1e-6)
+
+    def test_interleaved_push_pop(self):
+        @jax.jit
+        def run():
+            h = heap_make(8)
+            h = heap_push(h, 5.0, 1)
+            h = heap_push(h, 3.0, 2)
+            k1, v1 = heap_top(h)
+            h = heap_pop(h)
+            h = heap_push(h, 1.0, 3)
+            k2, v2 = heap_top(h)
+            h = heap_pop(h)
+            k3, v3 = heap_top(h)
+            return jnp.stack([k1, k2, k3]), jnp.stack([v1, v2, v3])
+
+        ks, vs = run()
+        np.testing.assert_allclose(np.asarray(ks), [3.0, 1.0, 5.0])
+        np.testing.assert_array_equal(np.asarray(vs), [2, 3, 1])

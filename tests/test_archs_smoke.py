@@ -1,0 +1,64 @@
+"""Per-arch smoke tests (deliverable f): reduced same-family config,
+one forward + one train step on CPU, asserting shapes + no NaNs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke
+from repro.models.model import forward, init_params, param_count
+from repro.optim import adamw, constant_lr
+from repro.train import make_train_step, train_state_init
+
+
+def _batch(cfg, b=2, s=16):
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+    }
+    if cfg.frontend == "audio":
+        batch["frames"] = jnp.asarray(rng.standard_normal((b, cfg.frontend_len, cfg.d_model)) * 0.1, jnp.float32)
+    if cfg.frontend == "vlm":
+        batch["patch_embeds"] = jnp.asarray(rng.standard_normal((b, cfg.frontend_len, cfg.d_model)) * 0.1, jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    batch = _batch(cfg)
+    state = train_state_init(jax.random.PRNGKey(0), cfg, adamw()[0])
+    assert param_count(state.params) > 0
+
+    logits, aux = jax.jit(lambda p, b: forward(p, cfg, b))(state.params, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+    step = make_train_step(cfg, adamw(), constant_lr(1e-3), donate=False)
+    new_state, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    assert int(new_state.step) == 1
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), state.params, new_state.params)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+    # loss decreases over a few steps on a fixed batch (trainability)
+    s = new_state
+    first = loss
+    for _ in range(5):
+        s, metrics = step(s, batch)
+    assert float(metrics["loss"]) < first
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_microbatched_grad_accum(arch):
+    cfg = get_smoke(arch)
+    batch = _batch(cfg, b=4)
+    state = train_state_init(jax.random.PRNGKey(1), cfg, adamw()[0])
+    step = make_train_step(cfg, adamw(), constant_lr(1e-3), microbatches=2, donate=False)
+    _s, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))

@@ -1,0 +1,89 @@
+"""Checkpoint atomicity, roundtrip, resume, GC, async."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_pytree,
+    save_pytree,
+)
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones((4,), jnp.bfloat16)},
+        "step": jnp.int32(7),
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(t, str(tmp_path), 7)
+    restored = restore_pytree(jax.tree.map(jnp.zeros_like, t), str(tmp_path), 7)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_latest_step_and_gc(tmp_path):
+    t = _tree()
+    mgr = CheckpointManager(str(tmp_path), every=1, keep_last=2, async_saves=False)
+    for s in (1, 2, 3, 4):
+        mgr.maybe_save(t, s)
+    assert latest_step(str(tmp_path)) == 4
+    kept = sorted(os.listdir(tmp_path))
+    assert kept == ["step_3", "step_4"]
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    save_pytree(_tree(), str(tmp_path), 1)
+    bad = {"params": {"w": jnp.zeros((3, 4))}, "step": jnp.int32(0)}
+    with pytest.raises(ValueError):
+        restore_pytree(bad, str(tmp_path), 1)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save_pytree(_tree(), str(tmp_path), 1)
+    bad = _tree()
+    bad["params"]["w"] = jnp.zeros((4, 4))
+    with pytest.raises(ValueError):
+        restore_pytree(bad, str(tmp_path), 1)
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=1, async_saves=True)
+    t = _tree()
+    mgr.maybe_save(t, 5)
+    mgr.wait()
+    restored, step = mgr.restore_latest(jax.tree.map(jnp.zeros_like, t))
+    assert step == 5
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(t["params"]["w"])
+    )
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """tmp dirs never count as checkpoints (atomic rename semantics)."""
+    os.makedirs(tmp_path / "tmp.9.123")
+    assert latest_step(str(tmp_path)) is None
+
+
+def test_train_resume_equivalence(tmp_path):
+    """Fault-tolerance end-to-end: train 6 steps straight vs train 3 +
+    'crash' + resume 3 — identical final loss (deterministic pipeline)."""
+    from repro.launch.train import main as train_main
+
+    base = ["--arch", "granite-3-2b", "--smoke", "--batch-size", "2",
+            "--seq-len", "32", "--log-every", "1"]
+    losses_straight = train_main(base + ["--steps", "6"])
+    ck = str(tmp_path / "ck")
+    train_main(base + ["--steps", "3", "--ckpt-dir", ck, "--ckpt-every", "1"])
+    losses_resumed = train_main(
+        base + ["--steps", "6", "--ckpt-dir", ck, "--ckpt-every", "1", "--resume"]
+    )
+    assert losses_resumed[-1] == pytest.approx(losses_straight[-1], rel=1e-4)

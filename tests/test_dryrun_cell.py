@@ -1,0 +1,51 @@
+"""Dry-run smoke: one real cell must lower+compile on the 512-device host
+platform and produce a complete artifact (subprocess — device count must be
+set before jax init)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "") + os.pathsep + "src"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "granite-3-2b",
+         "--shape", "decode_32k", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-2000:]}"
+    art_path = tmp_path / "granite-3-2b__decode_32k__16_16.json"
+    assert art_path.exists()
+    art = json.loads(art_path.read_text())
+    assert art["n_devices"] == 256
+    h = art["hlo_analysis"]
+    assert h["flops"] > 0 and h["bytes"] > 0
+    assert "memory_analysis" in art and "cost_analysis" in art
+    assert art["step_kind"] == "serve_step"
+
+
+@pytest.mark.slow
+def test_dryrun_ann_billion_scale_path(tmp_path):
+    """The distributed-TaCo dry-run (corpus-sharded query + build steps)
+    must lower+compile on the production mesh (small n for test speed; the
+    sharding structure is n-independent)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "") + os.pathsep + "src"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun_ann", "--n", "1e6",
+         "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-2000:]}"
+    arts = list(tmp_path.glob("ann_taco__*.json"))
+    assert arts, proc.stdout
+    art = json.loads(arts[0].read_text())
+    for job in ("query", "build_cov", "build_lloyd"):
+        assert art[job]["bytes"] > 0, job

@@ -1,0 +1,76 @@
+"""Elastic re-mesh planning + data pipeline determinism + io formats."""
+import numpy as np
+import pytest
+
+from repro.data.io import read_vecs, write_vecs
+from repro.data.tokens import SyntheticTokenStream
+from repro.launch.elastic import ElasticPlan, build_mesh, replan_mesh
+
+
+class TestElasticPlan:
+    def test_full_cluster(self):
+        plan = replan_mesh(256, model_shards=16, target_dp=16)
+        assert plan.mesh_shape == (16, 16)
+        assert plan.grad_accum_factor == 1
+        assert plan.dropped_devices == 0
+
+    def test_lost_host_shrinks_dp_only(self):
+        # lose 8 chips of 256 -> dp shrinks to 8 (power of two), model intact
+        plan = replan_mesh(248, model_shards=16, target_dp=16)
+        assert plan.mesh_shape == (8, 16)
+        assert plan.grad_accum_factor == 2  # preserve global batch
+        assert plan.dropped_devices == 248 - 128
+
+    def test_multi_pod_survivors(self):
+        plan = replan_mesh(511, model_shards=16, target_dp=16, pods=2)
+        assert plan.mesh_shape[-1] == 16
+        assert plan.grad_accum_factor >= 1
+
+    def test_too_few_devices_raises(self):
+        with pytest.raises(RuntimeError):
+            replan_mesh(7, model_shards=16)
+
+    def test_build_mesh_single_device(self):
+        plan = ElasticPlan(mesh_shape=(1, 1), axis_names=("data", "model"),
+                           grad_accum_factor=16, dropped_devices=0)
+        mesh = build_mesh(plan)
+        assert mesh.shape == {"data": 1, "model": 1}
+
+
+class TestDataDeterminism:
+    def test_same_step_same_batch(self):
+        s1 = SyntheticTokenStream(512, 32, 4, seed=3)
+        s2 = SyntheticTokenStream(512, 32, 4, seed=3)
+        b1, b2 = s1.batch(17), s2.batch(17)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_different_steps_differ(self):
+        s = SyntheticTokenStream(512, 32, 4, seed=3)
+        assert not np.array_equal(s.batch(1)["tokens"], s.batch(2)["tokens"])
+
+    def test_shards_differ(self):
+        a = SyntheticTokenStream(512, 32, 4, seed=3, shard=0, num_shards=2)
+        b = SyntheticTokenStream(512, 32, 4, seed=3, shard=1, num_shards=2)
+        assert not np.array_equal(a.batch(0)["tokens"], b.batch(0)["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        s = SyntheticTokenStream(512, 32, 4, seed=0)
+        b = s.batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+class TestVecsIO:
+    def test_fvecs_roundtrip(self, tmp_path):
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((17, 24)).astype(np.float32)
+        p = str(tmp_path / "x.fvecs")
+        write_vecs(p, x)
+        back = read_vecs(p)
+        np.testing.assert_array_equal(back, x)
+
+    def test_bvecs_and_maxcount(self, tmp_path):
+        x = np.arange(60, dtype=np.uint8).reshape(10, 6)
+        p = str(tmp_path / "x.bvecs")
+        write_vecs(p, x)
+        back = read_vecs(p, max_count=4)
+        np.testing.assert_array_equal(back, x[:4])

@@ -1,0 +1,92 @@
+"""Unit tests for the loop-aware structural HLO analyzer — the roofline
+instrumentation must itself be trustworthy."""
+import textwrap
+
+from repro.launch.hlo_analysis import analyze, parse_hlo
+
+SYNTH = textwrap.dedent("""
+    HloModule jit_step, is_scheduled=true
+
+    %add_red (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    %body.1 (arg: (s32[], f32[8,16], f32[16,32])) -> (s32[], f32[8,16], f32[16,32]) {
+      %arg = (s32[], f32[8,16], f32[16,32]) parameter(0)
+      %i = s32[] get-tuple-element(%arg), index=0
+      %x = f32[8,16] get-tuple-element(%arg), index=1
+      %w = f32[16,32] get-tuple-element(%arg), index=2
+      %d = f32[8,32] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,32] all-reduce(%d), replica_groups={}, to_apply=%add_red
+      %one = s32[] constant(1)
+      %ip = s32[] add(%i, %one)
+      ROOT %out = (s32[], f32[8,16], f32[16,32]) tuple(%ip, %x, %w)
+    }
+
+    %cond.1 (arg: (s32[], f32[8,16], f32[16,32])) -> pred[] {
+      %arg = (s32[], f32[8,16], f32[16,32]) parameter(0)
+      %i = s32[] get-tuple-element(%arg), index=0
+      %lim = s32[] constant(10)
+      ROOT %cmp = pred[] compare(%i, %lim), direction=LT
+    }
+
+    ENTRY %main_spmd (p0: f32[8,16], p1: f32[16,32]) -> f32[8,32] {
+      %p0 = f32[8,16] parameter(0)
+      %p1 = f32[16,32] parameter(1)
+      %zero = s32[] constant(0)
+      %t = (s32[], f32[8,16], f32[16,32]) tuple(%zero, %p0, %p1)
+      %wh = (s32[], f32[8,16], f32[16,32]) while(%t), condition=%cond.1, body=%body.1
+      %x2 = f32[8,16] get-tuple-element(%wh), index=1
+      %w2 = f32[16,32] get-tuple-element(%wh), index=2
+      ROOT %d2 = f32[8,32] dot(%x2, %w2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+    }
+""")
+
+
+def test_parse_finds_computations():
+    comps = parse_hlo(SYNTH)
+    assert {"body.1", "cond.1", "main_spmd"} <= set(comps)
+    assert any(i.op == "while" for i in comps["main_spmd"].instrs)
+
+
+def test_loop_multiplied_flops_and_collectives():
+    r = analyze(SYNTH)
+    # dot flops: 2*8*32*16 = 8192 per call; 10 in-loop + 1 outside = 11
+    assert r["flops"] == 8192 * 11
+    # all-reduce payload: 8*32*4 bytes = 1024, x10 trips
+    assert r["collective_bytes"]["all-reduce"] == 1024 * 10
+    assert r["collective_counts"]["all-reduce"] == 10
+    assert r["collective_total"] == 1024 * 10
+
+
+def test_bytes_include_dot_traffic():
+    r = analyze(SYNTH)
+    dot_bytes = (8 * 32 + 8 * 16 + 16 * 32) * 4  # out + both operands
+    assert r["bytes"] >= dot_bytes * 11
+
+
+def test_real_artifacts_have_sane_ratios():
+    """Every stored dry-run artifact must carry positive flops/bytes and a
+    useful-FLOP ratio in (0, ~3] for train cells (remat <= 3x)."""
+    import glob
+    import json
+    import os
+
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "artifacts")
+    files = glob.glob(os.path.join(art_dir, "*train_4k*16_16.json"))
+    if not files:
+        import pytest
+
+        pytest.skip("no dry-run artifacts present")
+    from benchmarks.roofline import roofline_row
+
+    for f in files[:6]:
+        art = json.load(open(f))
+        if "hlo_analysis" not in art:
+            continue
+        row = roofline_row(art)
+        assert row["hlo_flops_total"] > 0
+        assert 0.01 < row["useful_ratio"] < 3.0, (f, row["useful_ratio"])
+        assert row["dominant"] in ("compute", "memory", "collective")

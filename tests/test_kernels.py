@@ -1,0 +1,156 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------- l2dist
+@pytest.mark.parametrize("m,n,d", [(4, 7, 3), (16, 16, 8), (130, 257, 96), (128, 128, 128), (1, 300, 520)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l2dist_shapes_dtypes(m, n, d, dtype):
+    rng = np.random.default_rng(m * 1000 + n)
+    x = jnp.asarray(rng.standard_normal((m, d)), dtype)
+    y = jnp.asarray(rng.standard_normal((n, d)), dtype)
+    got = ops.l2dist(x, y, impl="pallas")
+    want = ref.l2dist_ref(x, y)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(1, 24), st.integers(0, 2**31 - 1))
+def test_l2dist_property(m, n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    got = np.asarray(ops.l2dist(x, y, impl="pallas"))
+    want = np.asarray(ref.l2dist_ref(x, y))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    assert np.all(got >= 0)
+
+
+def test_l2dist_self_zero_diag():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((32, 16)), jnp.float32)
+    d = np.asarray(ops.l2dist(x, x, impl="pallas"))
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-4)
+
+
+# ---------------------------------------------------------- kmeans_assign
+@pytest.mark.parametrize("n,k,d", [(10, 3, 4), (300, 16, 8), (257, 100, 5), (512, 128, 32)])
+def test_kmeans_assign_matches_ref(n, k, d):
+    rng = np.random.default_rng(n + k)
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+    a, md = ops.kmeans_assign(x, c, impl="pallas")
+    a_ref, md_ref = ref.kmeans_assign_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a_ref))
+    np.testing.assert_allclose(np.asarray(md), np.asarray(md_ref), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kmeans_assign_dtypes(dtype):
+    rng = np.random.default_rng(5)
+    # well-separated clusters so bf16 rounding can't flip the argmin
+    c = jnp.asarray(rng.standard_normal((8, 16)) * 10, dtype)
+    x = jnp.asarray(np.repeat(np.asarray(c, np.float32), 20, axis=0)
+                    + rng.standard_normal((160, 16)) * 0.01, dtype)
+    a, _ = ops.kmeans_assign(x, c, impl="pallas")
+    want = np.repeat(np.arange(8), 20)
+    np.testing.assert_array_equal(np.asarray(a), want)
+
+
+# ---------------------------------------------------------------- scscore
+def _scscore_case(rng, n_sub, q, sqrt_k, n):
+    d1s = jnp.asarray(rng.uniform(0, 4, (n_sub, q, sqrt_k)), jnp.float32)
+    d2s = jnp.asarray(rng.uniform(0, 4, (n_sub, q, sqrt_k)), jnp.float32)
+    a1s = jnp.asarray(rng.integers(0, sqrt_k, (n_sub, n)), jnp.int32)
+    a2s = jnp.asarray(rng.integers(0, sqrt_k, (n_sub, n)), jnp.int32)
+    taus = jnp.asarray(rng.uniform(1, 5, (n_sub, q)), jnp.float32)
+    return d1s, d2s, a1s, a2s, taus
+
+
+@pytest.mark.parametrize("n_sub,q,sqrt_k,n", [(2, 3, 5, 50), (6, 8, 16, 600), (4, 16, 32, 1024), (1, 1, 128, 100)])
+def test_scscore_matches_ref(n_sub, q, sqrt_k, n):
+    rng = np.random.default_rng(n_sub * 100 + q)
+    args = _scscore_case(rng, n_sub, q, sqrt_k, n)
+    got = ops.scscore(*args, impl="pallas")
+    want = ref.scscore_ref(*args)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 9), st.integers(2, 20), st.integers(1, 200), st.integers(0, 2**31 - 1))
+def test_scscore_property(n_sub, q, sqrt_k, n, seed):
+    rng = np.random.default_rng(seed)
+    args = _scscore_case(rng, n_sub, q, sqrt_k, n)
+    got = np.asarray(ops.scscore(*args, impl="pallas"))
+    want = np.asarray(ref.scscore_ref(*args))
+    np.testing.assert_array_equal(got, want)
+    assert got.min() >= 0 and got.max() <= n_sub
+
+
+# ------------------------------------------------- end-to-end kernel route
+def test_query_with_kernels_matches_jnp(small_dataset):
+    """cfg.use_kernels=True must produce identical results to the jnp path
+    (on CPU 'auto' resolves to jnp; force the pallas route explicitly)."""
+    import repro.kernels.ops as kops
+    from repro.core import build, query, taco_config
+
+    data, queries, _gt, _ = small_dataset
+    cfg = taco_config(n_subspaces=2, subspace_dim=6, n_clusters=64, alpha=0.05,
+                      beta=0.02, k=10)
+    idx = build(data[:2000], cfg)
+    ids_ref, d_ref = query(idx, queries, cfg)
+
+    orig_l2, orig_sc = kops.l2dist, kops.scscore
+    try:
+        kops_l2 = lambda x, y, impl="auto": orig_l2(x, y, impl="pallas")
+        kops_sc = lambda *a, impl="auto": orig_sc(*a, impl="pallas")
+        kops.l2dist, kops.scscore = kops_l2, kops_sc
+        cfg_k = taco_config(n_subspaces=2, subspace_dim=6, n_clusters=64, alpha=0.05,
+                            beta=0.02, k=10, use_kernels=True)
+        ids_k, d_k = query(idx, queries, cfg_k)
+    finally:
+        kops.l2dist, kops.scscore = orig_l2, orig_sc
+    np.testing.assert_array_equal(np.asarray(ids_k), np.asarray(ids_ref))
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_ref), rtol=1e-5)
+
+
+# --------------------------------------------------------- flash attention
+class TestFlashAttention:
+    @pytest.mark.parametrize("bh,s,hd,causal", [
+        (2, 16, 8, True), (3, 32, 16, False), (1, 128, 32, True), (2, 256, 64, True),
+    ])
+    def test_matches_ref(self, bh, s, hd, causal):
+        rng = np.random.default_rng(s)
+        q = jnp.asarray(rng.standard_normal((bh, s, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((bh, s, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((bh, s, hd)), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal=causal, impl="pallas")
+        want = ref.flash_attention_ref(q, k, v, causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_bf16(self):
+        rng = np.random.default_rng(7)
+        q = jnp.asarray(rng.standard_normal((2, 32, 16)), jnp.bfloat16)
+        k = jnp.asarray(rng.standard_normal((2, 32, 16)), jnp.bfloat16)
+        v = jnp.asarray(rng.standard_normal((2, 32, 16)), jnp.bfloat16)
+        got = ops.flash_attention(q, k, v, impl="pallas")
+        want = ref.flash_attention_ref(q, k, v, True)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=5e-2, atol=5e-2)
+
+    def test_padded_causal_tail(self):
+        """Non-block-divisible S with causal masking: padded tail sliced off."""
+        rng = np.random.default_rng(9)
+        q = jnp.asarray(rng.standard_normal((1, 150, 16)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, 150, 16)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, 150, 16)), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal=True, impl="pallas")
+        want = ref.flash_attention_ref(q, k, v, True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,76 @@
+"""Hypothesis property tests on system-level invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build, query, taco_config
+from repro.core.transform import apply_transform, eigensystem_allocation, fit_transform
+from repro.utils import pairwise_sq_dists
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 5), st.integers(2, 5), st.integers(0, 2**31 - 1))
+def test_allocation_balance_property(n_s, s, seed):
+    """Greedy allocation: after the first row, each new eigenvalue goes to
+    the smallest bucket — final log-product spread <= max single log-eig."""
+    rng = np.random.default_rng(seed)
+    d = n_s * s + rng.integers(0, 5)
+    ev = np.sort(rng.uniform(1.0, 50.0, d))[::-1]
+    buckets = eigensystem_allocation(ev, n_s, s)
+    logp = np.array([np.log(ev[b]).sum() for b in buckets])
+    assert logp.max() - logp.min() <= np.log(ev).max() + 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_transform_never_expands_distances(seed):
+    """Lemma 1 upper bound holds for arbitrary gaussian data."""
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal((500, 24)).astype(np.float32)
+    t = fit_transform(data, 3, 4)
+    td = np.asarray(apply_transform(t, data))
+    i, j = rng.integers(0, 500, 2)
+    d_orig = np.sum((data[i] - data[j]) ** 2)
+    d_trans = np.sum((td[i] - td[j]) ** 2)
+    assert d_trans <= d_orig * (1 + 1e-3) + 1e-4
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_query_results_are_valid_ids_and_sorted(seed):
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal((2000, 32)).astype(np.float32)
+    queries = rng.standard_normal((4, 32)).astype(np.float32)
+    cfg = taco_config(n_subspaces=3, subspace_dim=6, n_clusters=64,
+                      alpha=0.1, beta=0.05, k=5, seed=seed % 97)
+    idx = build(data, cfg)
+    ids, dists = query(idx, queries, cfg)
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    valid = ids >= 0
+    assert np.all(ids[valid] < data.shape[0])
+    d_fix = np.where(np.isfinite(dists), dists, np.inf)
+    assert np.all(np.diff(d_fix, axis=1) >= -1e-5)
+    # returned distances are true distances
+    for q in range(4):
+        for r in range(5):
+            if valid[q, r]:
+                true = np.sum((data[ids[q, r]] - queries[q]) ** 2)
+                assert abs(dists[q, r] - true) <= 1e-2 * max(true, 1.0)
+
+
+def test_sc_separation_lemma2_binomial():
+    """Lemma 2: SC-scores of neighbors vs non-neighbors separate at the
+    binomial rate — empirical type-I/II errors shrink as N_s grows."""
+    rng = np.random.default_rng(0)
+    p_star, p = 0.6, 0.1
+    errs = []
+    for n_s in (2, 6, 12):
+        sc_nbr = rng.binomial(n_s, p_star, 4000)
+        sc_non = rng.binomial(n_s, p, 4000)
+        thresh = n_s * (p_star + p) / 2
+        err = 0.5 * ((sc_nbr < thresh).mean() + (sc_non >= thresh).mean())
+        errs.append(err)
+    assert errs[2] < errs[1] < errs[0] + 1e-9
+    assert errs[2] < 0.05

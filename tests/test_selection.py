@@ -1,0 +1,82 @@
+"""Tests for candidate selection (paper Alg. 5 query-aware + SuCo fixed)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.selection import (
+    _alg5_threshold_reference,
+    fixed_threshold,
+    query_aware_threshold,
+    sc_histogram,
+    select_candidates,
+)
+
+
+def test_histogram():
+    sc = jnp.asarray([[0, 1, 1, 3, 3, 3], [2, 2, 2, 2, 0, 0]])
+    h = np.asarray(sc_histogram(sc, 3))
+    np.testing.assert_array_equal(h, [[1, 2, 0, 3], [2, 0, 4, 0]])
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(2, 10),
+    st.lists(st.integers(0, 500), min_size=3, max_size=11),
+    st.floats(0.5, 400.0),
+)
+def test_query_aware_matches_alg5_reference(n_s, hist_list, beta_n):
+    hist = np.zeros(n_s + 1, np.int32)
+    for i, v in enumerate(hist_list[: n_s + 1]):
+        hist[i] = v
+    ref = _alg5_threshold_reference(hist, beta_n, n_s)
+    last, count = query_aware_threshold(jnp.asarray(hist)[None, :], beta_n, n_s)
+    assert int(last[0]) == ref
+    assert int(count[0]) == hist[max(ref, 0) :].sum()
+
+
+def test_query_aware_adapts_per_query():
+    """A discriminative SC distribution yields fewer candidates than a flat
+    one (Alg. 5: the level that overflows the beta*n budget is still included
+    — so flat distributions overflow with a big low level)."""
+    n_s = 6
+    n = 1000
+    sc_sharp = np.zeros(n, np.int32)
+    sc_sharp[:20] = 6  # 20 clear winners (2*20 <= beta_n -> level fits)
+    sc_sharp[20:120] = 2  # mid mass
+    sc_flat = np.zeros(n, np.int32)
+    sc_flat[:300] = 1  # no separation: all mass at SC=1
+    sc = jnp.asarray(np.stack([sc_sharp, sc_flat]))
+    ids, valid, thresh, count = select_candidates(sc, 50.0, n_s, cap=600, mode="query_aware")
+    assert int(count[0]) == 120  # levels 6 (fits) + 2 (overflows, included)
+    assert int(count[1]) == 300  # level 1 overflows immediately, included
+    assert int(count[0]) < int(count[1])
+    assert int(valid[0].sum()) == int(count[0])
+
+
+def test_fixed_budget():
+    rng = np.random.default_rng(0)
+    sc = jnp.asarray(rng.integers(0, 7, size=(4, 2000), dtype=np.int32))
+    ids, valid, thresh, count = select_candidates(sc, 100.0, 6, cap=400, mode="fixed")
+    # fixed mode: exactly beta_n candidates per query
+    np.testing.assert_array_equal(np.asarray(valid.sum(1)), [100, 100, 100, 100])
+
+
+def test_selected_ids_are_top_scores():
+    rng = np.random.default_rng(1)
+    sc_np = rng.integers(0, 7, size=(3, 500), dtype=np.int32)
+    sc = jnp.asarray(sc_np)
+    ids, valid, thresh, count = select_candidates(sc, 30.0, 6, cap=200, mode="query_aware")
+    ids, valid, thresh = np.asarray(ids), np.asarray(valid), np.asarray(thresh)
+    for q in range(3):
+        sel = ids[q][valid[q]]
+        assert np.all(sc_np[q][sel] >= thresh[q])
+        # every point at or above threshold is selected (no truncation here)
+        expected = np.flatnonzero(sc_np[q] >= thresh[q])
+        assert set(sel.tolist()) == set(expected.tolist())
+
+
+def test_cap_truncation_marks_validity():
+    sc = jnp.asarray(np.full((1, 100), 5, np.int32))
+    ids, valid, thresh, count = select_candidates(sc, 1000.0, 6, cap=10, mode="query_aware")
+    assert int(valid.sum()) == 10  # capacity-bounded

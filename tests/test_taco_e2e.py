@@ -1,0 +1,139 @@
+"""End-to-end behaviour tests: TaCo/SuCo/ablations/SC-Linear/IVF quality and
+the paper's headline orderings at small scale."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ABLATIONS,
+    SCLinear,
+    build,
+    build_ivf,
+    ivf_query,
+    query_with_stats,
+    suco_config,
+    taco_config,
+)
+from repro.utils import mean_relative_error, recall_at_k
+
+
+CFG = dict(n_subspaces=4, subspace_dim=8, n_clusters=256, alpha=0.05, beta=0.02, k=10)
+
+
+@pytest.fixture(scope="module")
+def taco_run(small_dataset):
+    data, queries, gt_i, gt_d = small_dataset
+    cfg = taco_config(**CFG)
+    idx = build(data, cfg)
+    ids, dists, stats = query_with_stats(idx, queries, cfg)
+    return idx, cfg, np.asarray(ids), np.asarray(dists), stats
+
+
+def test_taco_output_shapes(taco_run, small_dataset):
+    _idx, cfg, ids, dists, _stats = taco_run
+    _data, queries, _gt, _ = small_dataset
+    assert ids.shape == (queries.shape[0], cfg.k)
+    assert dists.shape == (queries.shape[0], cfg.k)
+    assert not np.any(np.isnan(dists[np.isfinite(dists)]))
+
+
+def test_taco_recall_reasonable(taco_run, small_dataset):
+    _idx, _cfg, ids, _d, _stats = taco_run
+    _data, _q, gt_i, _ = small_dataset
+    assert recall_at_k(ids, gt_i, 10) > 0.5
+
+
+def test_taco_beats_suco_recall(small_dataset):
+    """Paper headline: TaCo >= SuCo quality at matched parameters."""
+    data, queries, gt_i, _ = small_dataset
+    recalls = {}
+    for name in ("taco", "suco"):
+        cfg = ABLATIONS[name](**CFG)
+        idx = build(data, cfg)
+        ids, _d, _s = query_with_stats(idx, queries, cfg)
+        recalls[name] = recall_at_k(np.asarray(ids), gt_i, 10)
+    assert recalls["taco"] >= recalls["suco"] - 0.05
+
+
+def test_sclinear_high_recall(small_dataset):
+    """Paper §2.3: SC-Linear (exact collision counting) achieves ~0.99 recall."""
+    data, queries, gt_i, _ = small_dataset
+    cfg = suco_config(n_subspaces=4, subspace_dim=8, alpha=0.05, beta=0.02, k=10)
+    ids, _ = SCLinear(data, cfg).query(queries)
+    assert recall_at_k(np.asarray(ids), gt_i, 10) > 0.9
+
+
+def test_all_ablations_run(small_dataset):
+    data, queries, gt_i, _ = small_dataset
+    for name, mk in ABLATIONS.items():
+        cfg = mk(**CFG)
+        idx = build(data, cfg)
+        ids, _d, stats = query_with_stats(idx, queries, cfg)
+        r = recall_at_k(np.asarray(ids), gt_i, 10)
+        assert r > 0.2, f"{name} recall degenerate: {r}"
+        assert not np.any(np.asarray(stats["truncated"])), f"{name} truncated"
+
+
+def test_results_sorted_by_distance(taco_run):
+    _idx, _cfg, _ids, dists, _stats = taco_run
+    finite = np.where(np.isfinite(dists), dists, np.inf)
+    assert np.all(np.diff(finite, axis=1) >= -1e-5)
+
+
+def test_returned_distances_are_exact(taco_run, small_dataset):
+    _idx, _cfg, ids, dists, _ = taco_run
+    data, queries, _gt, _ = small_dataset
+    for q in range(3):
+        for j in range(3):
+            if ids[q, j] >= 0:
+                true = np.sum((data[ids[q, j]] - queries[q]) ** 2)
+                assert dists[q, j] == pytest.approx(true, rel=1e-4)
+
+
+def test_mre_small(taco_run, small_dataset):
+    _idx, _cfg, _ids, dists, _ = taco_run
+    _data, _q, _gt, gt_d = small_dataset
+    mre = mean_relative_error(dists, gt_d)
+    assert 0 <= mre < 0.5
+
+
+def test_pareto_principle(taco_run, small_dataset):
+    """Fig. 1/3: near neighbors carry discriminatively high SC-scores —
+    the mean SC of the true top-20% nearest must exceed the rest by a
+    clear margin."""
+    _idx, _cfg, _ids, _d, stats = taco_run
+    data, queries, _gt, _ = small_dataset
+    sc = np.asarray(stats["sc"])  # (Q, n)
+    from repro.utils import exact_knn
+
+    n = data.shape[0]
+    top_frac = int(0.2 * n)
+    _, near_ids = exact_knn(data, queries, top_frac)
+    margins = []
+    for q in range(queries.shape[0]):
+        near = np.zeros(n, bool)
+        near[near_ids[q]] = True
+        margins.append(sc[q][near].mean() - sc[q][~near].mean())
+    assert np.mean(margins) > 0.3
+
+
+def test_ivf_baseline(small_dataset):
+    data, queries, gt_i, _ = small_dataset
+    idx = build_ivf(data, n_lists=64, kmeans_iters=5)
+    ids, dists = ivf_query(idx, queries, nprobe=8, k=10)
+    assert recall_at_k(np.asarray(ids), gt_i, 10) > 0.7
+
+
+def test_index_bytes_accounting(taco_run):
+    idx, _cfg, _i, _d, _s = taco_run
+    # index bytes exclude the dataset; must be far smaller than data
+    assert 0 < idx.index_bytes < idx.data.size * idx.data.dtype.itemsize
+
+
+def test_taco_index_smaller_than_suco(small_dataset):
+    """Paper: TaCo reduces memory footprint vs SuCo (fewer dims after
+    transformation -> same IMI size, but smaller/equal overall)."""
+    data, _q, _g, _ = small_dataset
+    t_idx = build(data, taco_config(**CFG))
+    s_idx = build(data, suco_config(**CFG))
+    assert t_idx.index_bytes <= s_idx.index_bytes * 1.1

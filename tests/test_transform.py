@@ -1,0 +1,131 @@
+"""Tests for the entropy-averaging transform (paper Alg. 1 + 2, Thm. 1/2, Lemma 1)."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.transform import (
+    apply_transform,
+    eigensystem_allocation,
+    fit_transform,
+)
+from repro.data import spiked_covariance_dataset
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    data = spiked_covariance_dataset(4000, 48, seed=3)
+    t = fit_transform(data, n_subspaces=4, subspace_dim=6)
+    return data, t
+
+
+def test_basis_orthonormal(fitted):
+    _, t = fitted
+    b = np.asarray(t.basis)
+    gram = b.T @ b
+    np.testing.assert_allclose(gram, np.eye(b.shape[1]), atol=1e-4)
+
+
+def test_allocation_is_partition(fitted):
+    data, t = fitted
+    buckets = eigensystem_allocation(
+        np.asarray(_eigvals(data)), t.n_subspaces, t.subspace_dim
+    )
+    flat = list(itertools.chain.from_iterable(buckets))
+    assert len(flat) == len(set(flat)) == t.n_subspaces * t.subspace_dim
+    assert all(len(b) == t.subspace_dim for b in buckets)
+
+
+def _eigvals(data):
+    x = np.asarray(data, np.float64)
+    x = x - x.mean(0)
+    cov = x.T @ x / (x.shape[0] - 1)
+    return np.linalg.eigvalsh(cov)
+
+
+def test_allocation_keeps_top_eigenvalues(fitted):
+    data, t = fitted
+    ev = _eigvals(data)
+    m = t.n_subspaces * t.subspace_dim
+    top = np.sort(ev)[::-1][:m]
+    np.testing.assert_allclose(
+        np.sort(np.asarray(t.eigvals))[::-1], top, rtol=1e-3
+    )
+
+
+def test_allocation_balances_log_products():
+    """The greedy allocation's bucket log-products must be at least as
+    balanced as a naive round-robin allocation (Thm. 1 optimal balance)."""
+    rng = np.random.default_rng(0)
+    ev = np.sort(rng.uniform(1.0, 100.0, size=64))[::-1]
+    n_s, s = 4, 8
+    buckets = eigensystem_allocation(ev, n_s, s)
+    logp = np.array([np.log(ev[b]).sum() for b in buckets])
+    greedy_spread = logp.max() - logp.min()
+    # round-robin (contiguous blocks) comparison
+    blocks = [np.log(ev[i * s : (i + 1) * s]).sum() for i in range(n_s)]
+    block_spread = max(blocks) - min(blocks)
+    assert greedy_spread <= block_spread + 1e-9
+
+
+def test_allocation_optimal_small_case_bruteforce():
+    """For a tiny case, greedy allocation achieves the brute-force optimal
+    min-max bucket log-product over all balanced partitions (Thm. 1)."""
+    ev = np.array([32.0, 16.0, 8.0, 4.0, 2.0, 1.5])
+    n_s, s = 3, 2
+    buckets = eigensystem_allocation(ev, n_s, s)
+    greedy_max = max(np.log(ev[b]).sum() for b in buckets)
+
+    best = np.inf
+    idx = list(range(6))
+    for perm in itertools.permutations(idx):
+        groups = [perm[0:2], perm[2:4], perm[4:6]]
+        mx = max(np.log(ev[list(g)]).sum() for g in groups)
+        best = min(best, mx)
+    assert greedy_max <= best + 1e-9
+
+
+def test_distance_contraction_lemma1(fitted):
+    """Lemma 1: ||B^T(x-y)||^2 <= ||x-y||^2 always; and close when the
+    residual energy is small (spiked data)."""
+    data, t = fitted
+    x = np.asarray(data[:256], np.float32)
+    tx = np.asarray(apply_transform(t, x))
+    d_orig = np.sum((x[:128, None] - x[None, 128:]) ** 2, -1)
+    d_trans = np.sum((tx[:128, None] - tx[None, 128:]) ** 2, -1)
+    assert np.all(d_trans <= d_orig * (1 + 1e-4))
+    # spiked data: most pairwise energy survives
+    assert np.median(d_trans / np.maximum(d_orig, 1e-9)) > 0.5
+
+
+def test_neighborhood_order_preservation_thm2(fitted):
+    """Theorem 2: pairs separated by more than the residual epsilon keep
+    their relative order after transformation."""
+    data, t = fitted
+    x = np.asarray(data[:200], np.float32)
+    tx = np.asarray(apply_transform(t, x))
+    d_o = np.sum((x[0] - x[1:]) ** 2, -1)
+    d_t = np.sum((tx[0] - tx[1:]) ** 2, -1)
+    # empirical epsilon: max residual ratio over these pairs
+    eps = np.max(1.0 - np.minimum(d_t / np.maximum(d_o, 1e-9), 1.0))
+    far = d_o[None, :] * (1 - eps) > d_o[:, None]  # (11): o_j closer than o_z
+    viol = far & (d_t[None, :] <= d_t[:, None])
+    assert viol.sum() == 0
+
+
+def test_transform_reduces_dimensionality(fitted):
+    data, t = fitted
+    td = apply_transform(t, data)
+    assert td.shape == (data.shape[0], t.n_subspaces * t.subspace_dim)
+    assert td.shape[1] < data.shape[1]
+    assert not np.any(np.isnan(np.asarray(td)))
+
+
+def test_query_and_data_transform_consistent(fitted):
+    """Transforming jointly or separately must agree (Alg. 6 line 1)."""
+    data, t = fitted
+    q = data[:7]
+    joint = np.asarray(apply_transform(t, data))[:7]
+    solo = np.asarray(apply_transform(t, q))
+    np.testing.assert_allclose(joint, solo, rtol=1e-5, atol=1e-5)
