@@ -1,0 +1,93 @@
+"""ANN serving throughput: batched engine vs one-query-at-a-time baselines.
+
+Two baselines bracket the status quo:
+
+  * ``adhoc``  — what callers do today (see ROADMAP/ISSUE): each request
+    issues its own ``jax.jit(query)`` closure, so every caller pays
+    tracing + compilation. This is the request path the engine replaces.
+  * ``cached`` — best-case steady state without an engine: one shared
+    pre-compiled closure invoked per request (batch 1). Isolates the pure
+    micro-batching win from the compile-amortization win.
+
+The engine micro-batches the same request stream into padded shape
+buckets with a jit cache keyed on (bucket, k, cfg).
+
+  PYTHONPATH=src python benchmarks/bench_serving.py [--n 20000] [--d 64] \
+      [--requests 32] [--pressure 16]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import build, make_query_fn, query, taco_config
+from repro.data import gmm_dataset, make_queries
+from repro.serving import AnnRequest, AnnServingEngine
+
+
+def bench(n=20000, d=64, k=10, requests=32, pressure=16, seed=0):
+    data, held_out = make_queries(gmm_dataset(n, d, seed=seed), 128)
+    cfg = taco_config(n_subspaces=6, subspace_dim=8, n_clusters=1024,
+                      alpha=0.05, beta=0.02, k=k)
+    print(f"building TaCo index: n={data.shape[0]} d={d} ...", flush=True)
+    index = build(data, cfg)
+    rng = np.random.default_rng(seed)
+    qs = held_out[rng.integers(0, held_out.shape[0], requests)]
+
+    # --- adhoc: a fresh jit closure per request (today's caller path) -----
+    t0 = time.perf_counter()
+    for i in range(requests):
+        fn = make_query_fn(index, cfg)  # per-caller closure: traces+compiles
+        jax.block_until_ready(fn(qs[i : i + 1]))
+    adhoc_s = time.perf_counter() - t0
+
+    # --- cached: one shared pre-compiled closure, one query per call ------
+    naive = make_query_fn(index, cfg)
+    jax.block_until_ready(naive(qs[:1]))  # compile outside the timing
+    t0 = time.perf_counter()
+    for i in range(requests):
+        jax.block_until_ready(naive(qs[i : i + 1]))
+    cached_s = time.perf_counter() - t0
+
+    # --- batched engine: waves of `pressure` concurrent requests ----------
+    engine = AnnServingEngine(index, cfg, max_batch=max(pressure, 1))
+    engine.search([AnnRequest(query=q) for q in qs[:pressure]])  # warm
+    engine.reset_telemetry()
+    t0 = time.perf_counter()
+    for lo in range(0, requests, pressure):
+        engine.search([AnnRequest(query=q) for q in qs[lo : lo + pressure]])
+    engine_s = time.perf_counter() - t0
+
+    t = engine.telemetry()
+    rows = [("adhoc-jit", adhoc_s), ("cached-jit", cached_s), ("engine", engine_s)]
+    print(f"requests={requests} pressure={pressure}")
+    for name, secs in rows:
+        print(f"  {name:10s}: {secs:7.3f}s  {requests / secs:8.0f} queries/s")
+    print(f"  engine p50 {t['latency_p50_s'] * 1e3:.2f} ms  p99 "
+          f"{t['latency_p99_s'] * 1e3:.2f} ms  trunc {t['truncation_rate']:.3f}  "
+          f"compiles {t['compiles_per_bucket']}")
+    print(f"  speedup vs adhoc : {adhoc_s / engine_s:7.2f}x")
+    print(f"  speedup vs cached: {cached_s / engine_s:7.2f}x")
+    return adhoc_s / engine_s
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--pressure", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.pressure < 1:
+        ap.error("--pressure must be >= 1")
+    bench(n=args.n, d=args.d, k=args.k, requests=args.requests,
+          pressure=args.pressure, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

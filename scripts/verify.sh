@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Single verify entrypoint shared by builders and CI.
+#
+#   scripts/verify.sh        — tier-1: the full suite (ROADMAP "Tier-1 verify")
+#   scripts/verify.sh fast   — skip @slow tests (subprocess dry-runs, meshes)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [ "${1:-}" = "fast" ]; then
+  exec python -m pytest -x -q -m "not slow"
+fi
+exec python -m pytest -x -q

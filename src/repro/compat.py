@@ -1,0 +1,134 @@
+"""JAX version-compatibility layer.
+
+Compat policy
+-------------
+The container pins JAX 0.4.37 but the codebase is written against the
+modern (>= 0.6) public API names. Every API that moved or changed shape
+between those versions is imported from this module instead of from
+``jax`` directly, so exactly one place knows about versions:
+
+  * ``shard_map`` — new JAX exposes ``jax.shard_map`` with a ``check_vma``
+    kwarg and optional ambient mesh; old JAX only has
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep`` and a
+    mandatory mesh. Ours accepts the new spelling and translates.
+  * ``make_mesh`` — old ``jax.make_mesh`` has no ``axis_types`` kwarg;
+    ours silently drops it when unsupported.
+  * ``AxisType`` — absent pre-0.5; a string-enum stub keeps call sites
+    uniform (only ever consumed by ``make_mesh`` above).
+  * ``set_mesh`` — new ``jax.set_mesh(mesh)`` ambient-mesh context; on old
+    JAX we enter the legacy ``Mesh`` context manager and record the mesh
+    so ``shard_map(..., mesh=None)`` can find it.
+  * ``axis_size`` — ``jax.lax.axis_size`` is absent pre-0.5; old JAX's
+    ``jax.core.axis_frame(name)`` returns the mapped axis size directly.
+
+When adding code that needs a recent JAX API, add a shim here rather
+than version-gating at the call site; when the pin moves forward, the
+shims collapse to re-exports and can be deleted one by one.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import inspect
+
+import jax
+
+_HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_NATIVE_SET_MESH = hasattr(jax, "set_mesh")
+_MAKE_MESH_TAKES_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters
+)
+
+if not _HAS_NATIVE_SHARD_MAP:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+else:
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stub of jax.sharding.AxisType for old JAX (pre-0.5).
+
+        Only ever consumed by :func:`make_mesh`, which drops axis_types
+        entirely on old JAX (where every mesh axis is implicitly Auto).
+        """
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+_ambient_mesh: "jax.sharding.Mesh | None" = None
+
+
+def current_mesh():
+    """The mesh installed by :func:`set_mesh`, or None.
+
+    Falls back to the legacy ``with mesh:`` thread-resource env so code
+    inside a bare ``Mesh`` context also resolves.
+    """
+    if _ambient_mesh is not None:
+        return _ambient_mesh
+    try:
+        from jax._src import mesh as mesh_lib
+
+        pm = mesh_lib.thread_resources.env.physical_mesh
+        if pm.devices.size:
+            return pm
+    except Exception:
+        pass
+    return None
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Ambient-mesh context usable as ``with set_mesh(mesh):`` on any JAX."""
+    if _HAS_NATIVE_SET_MESH:
+        with jax.set_mesh(mesh):
+            yield mesh
+        return
+    global _ambient_mesh
+    prev = _ambient_mesh
+    _ambient_mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _ambient_mesh = prev
+
+
+def shard_map(f, *, mesh=None, in_specs, out_specs, check_vma=True):
+    """``jax.shard_map`` with the new-API signature on every JAX version.
+
+    ``mesh=None`` uses the ambient mesh (:func:`set_mesh`); ``check_vma``
+    maps onto old JAX's ``check_rep``.
+    """
+    if _HAS_NATIVE_SHARD_MAP:
+        kwargs = dict(in_specs=in_specs, out_specs=out_specs, check_vma=check_vma)
+        if mesh is not None:
+            kwargs["mesh"] = mesh
+        return jax.shard_map(f, **kwargs)
+    m = mesh if mesh is not None else current_mesh()
+    if m is None:
+        raise ValueError(
+            "shard_map needs a mesh: pass mesh=... or enter repro.compat.set_mesh"
+        )
+    return _legacy_shard_map(
+        f, mesh=m, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )
+
+
+def axis_size(axis_name) -> int:
+    """Size of a mapped (shard_map/pmap) axis, on any JAX version."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.core.axis_frame(axis_name)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+    """``jax.make_mesh`` that tolerates ``axis_types`` on old JAX (dropped —
+    pre-0.5 meshes behave as all-Auto, which is what every call site wants)."""
+    if axis_types is not None and _MAKE_MESH_TAKES_AXIS_TYPES:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)

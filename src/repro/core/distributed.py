@@ -26,7 +26,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import axis_size, shard_map
 
 from repro.core.activation import activation_taus
 from repro.core.config import SCConfig
@@ -120,7 +121,7 @@ def make_distributed_query(
         # globalize ids and combine across data shards
         shard_off = jnp.int32(0)
         for ax in data_axes:
-            shard_off = shard_off * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            shard_off = shard_off * axis_size(ax) + jax.lax.axis_index(ax)
         ids_global = jnp.where(ids_local >= 0, ids_local + shard_off * n_local, -1)
         all_ids = jax.lax.all_gather(ids_global, data_axes, axis=1, tiled=True)
         all_d = jax.lax.all_gather(dists_local, data_axes, axis=1, tiled=True)

@@ -7,10 +7,14 @@ remaining beta*n budget; otherwise the walk stops. All points with
 SC >= last_collision are candidates — the candidate count therefore adapts to
 the query's SC-score discriminability (Lemma 2).
 
-JAX adaptation: candidate sets have a static capacity ``cap``; the selected
-ids come from top-k on SC-score and are masked by the per-query threshold.
-Results are identical to the dynamic-shape algorithm whenever the true
-candidate count <= cap (asserted in tests; cap is a config knob).
+JAX adaptation: candidate sets have a static capacity ``cap``. Query-aware
+mode stream-compacts the ids at or above the per-query threshold (O(n)
+cumsum+scatter — no sort); fixed mode takes top-k on SC-score and cuts the
+budget by rank. Results are identical to the dynamic-shape algorithm
+whenever the true candidate count <= cap (asserted in tests; cap is a
+config knob, sized 4x over the beta*n budget). Beyond cap — abnormal
+operation, surfaced via the ``truncated`` stat — query-aware mode keeps
+the lowest-index above-threshold points rather than the highest-SC ones.
 """
 from __future__ import annotations
 
@@ -21,12 +25,13 @@ import jax.numpy as jnp
 
 
 def sc_histogram(sc: jax.Array, n_subspaces: int) -> jax.Array:
-    """Per-query histogram of SC-scores: (Q, N_s+1)."""
+    """Per-query histogram of SC-scores: (Q, N_s+1).
 
-    def one(row):
-        return jnp.zeros((n_subspaces + 1,), jnp.int32).at[row].add(1)
-
-    return jax.vmap(one)(sc)
+    One reduction per level instead of a (Q, n) scatter-add: SC-scores live
+    in [0, N_s] with N_s ~ 6, and XLA CPU reductions are ~30x faster than
+    the equivalent scatter."""
+    levels = [jnp.sum(sc == l, axis=1) for l in range(n_subspaces + 1)]
+    return jnp.stack(levels, axis=1).astype(jnp.int32)
 
 
 def query_aware_threshold(hist: jax.Array, beta_n: float, n_subspaces: int):
@@ -91,9 +96,27 @@ def select_candidates(
     cand_count (Q,)). ``valid`` masks out both sub-threshold points (query-
     aware mode) and beyond-budget points (fixed mode).
     """
+    q, n = sc.shape
     if mode == "query_aware":
         hist = sc_histogram(sc, n_subspaces)
         thresh, count = query_aware_threshold(hist, beta_n, n_subspaces)
+        # Stream-compact the >= thresh candidates (one cumsum + one scatter,
+        # O(n)) instead of top_k over sc (O(n log n) and ~10x slower on CPU).
+        # The candidate SET is identical whenever count <= cap — the regime
+        # cap is sized for (see module docstring); downstream re-ranking is
+        # order-independent, so slot order (index vs score) never matters.
+        # Under truncation the kept cap-subset is by index, not by score.
+        mask = sc >= thresh[:, None]
+        pos = jnp.cumsum(mask, axis=1) - 1  # candidate slot, index order
+        slot = jnp.where(mask & (pos < cap), pos, cap)  # cap = dumpster col
+        point_ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (q, n))
+        ids = (
+            jnp.zeros((q, cap + 1), jnp.int32)
+            .at[jnp.arange(q)[:, None], slot]
+            .set(point_ids)[:, :cap]
+        )
+        valid = jnp.arange(cap)[None, :] < jnp.minimum(count, cap)[:, None]
+        return ids, valid, thresh, jnp.minimum(count, cap)
     elif mode == "fixed":
         thresh, count = fixed_threshold(sc, beta_n, n_subspaces)
     else:
@@ -101,8 +124,7 @@ def select_candidates(
 
     top_sc, ids = jax.lax.top_k(sc, cap)
     valid = top_sc >= thresh[:, None]
-    if mode == "fixed":
-        # fixed budget: also cut ties beyond beta_n by rank
-        budget = int(min(max(1, round(beta_n)), sc.shape[1]))
-        valid = valid & (jnp.arange(cap)[None, :] < budget)
+    # fixed budget: also cut ties beyond beta_n by rank
+    budget = int(min(max(1, round(beta_n)), n))
+    valid = valid & (jnp.arange(cap)[None, :] < budget)
     return ids.astype(jnp.int32), valid, thresh, jnp.minimum(count, cap)

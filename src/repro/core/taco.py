@@ -176,20 +176,27 @@ def rerank(
     return jnp.where(top_valid, top_ids, -1), jnp.where(top_valid, top_d, jnp.inf)
 
 
-def query(index: SCIndex, queries: jax.Array, cfg: SCConfig):
+def query(index: SCIndex, queries: jax.Array, cfg: SCConfig, *, k: int | None = None):
     """Paper Algorithm 6: returns (ids (Q, k), sq_dists (Q, k))."""
-    ids, dists, _stats = query_with_stats(index, queries, cfg)
+    ids, dists, _stats = query_with_stats(index, queries, cfg, k=k)
     return ids, dists
 
 
-def query_with_stats(index: SCIndex, queries: jax.Array, cfg: SCConfig):
+def query_with_stats(
+    index: SCIndex, queries: jax.Array, cfg: SCConfig, *, k: int | None = None
+):
+    """Alg. 6 with diagnostics. ``k`` overrides ``cfg.k`` per call without
+    rebuilding the config (it stays a Python int — static under jit — so
+    callers serving many result counts key their jit cache on it instead of
+    recompiling per request; see repro.serving.ann_engine)."""
+    k = cfg.k if k is None else int(k)
     queries = jnp.asarray(queries, jnp.float32)
     sc, stats = compute_sc_scores(index, queries, cfg)
     cap = cfg.cap_for(index.n)
     cand_ids, valid, thresh, count = select_candidates(
         sc, float(cfg.beta * index.n), cfg.n_subspaces, cap, mode=cfg.selection
     )
-    ids, dists = rerank(index.data, queries, cand_ids, valid, cfg.k)
+    ids, dists = rerank(index.data, queries, cand_ids, valid, k)
     stats = dict(
         stats,
         sc_threshold=thresh,
@@ -200,11 +207,11 @@ def query_with_stats(index: SCIndex, queries: jax.Array, cfg: SCConfig):
     return ids, dists, stats
 
 
-def make_query_fn(index: SCIndex, cfg: SCConfig):
+def make_query_fn(index: SCIndex, cfg: SCConfig, *, k: int | None = None):
     """A jit-compiled query closure (index captured as constants)."""
 
     @jax.jit
     def fn(queries):
-        return query(index, queries, cfg)
+        return query(index, queries, cfg, k=k)
 
     return fn

@@ -96,7 +96,9 @@ def main():
     )
     from repro.launch.hlo_analysis import analyze
 
-    with jax.set_mesh(mesh):
+    from repro.compat import set_mesh
+
+    with set_mesh(mesh):
         jobs = {
             "query": lambda: make_distributed_query(mesh, cfg, idx_sds, n, da, query_axes=())
             .lower(idx_sds, q_sds),

@@ -1,3 +1,25 @@
+"""Serving engines — the request paths over this repo's two workloads.
+
+Two engines share the micro-batching helpers in
+:mod:`repro.serving.batching`:
+
+  * :class:`ServingEngine` (:mod:`repro.serving.engine`) — LM decode:
+    slot-based continuous batching over a fixed decode-slot pool; prefill
+    compiles once per prompt-length, finished slots refill from the queue.
+  * :class:`AnnServingEngine` (:mod:`repro.serving.ann_engine`) — TaCo
+    k-ANNS (paper Alg. 6): micro-batches a stream of :class:`AnnRequest`\\ s
+    into padded shape buckets, jit-cached per ``(bucket, k, cfg)`` so
+    steady-state query traffic never recompiles; per-request ``k``/``beta``
+    overrides; telemetry (p50/p99 latency, QPS, truncation rate, compile
+    counts).
+"""
+from repro.serving.ann_engine import AnnRequest, AnnResult, AnnServingEngine
 from repro.serving.engine import Request, ServingEngine
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = [
+    "AnnRequest",
+    "AnnResult",
+    "AnnServingEngine",
+    "Request",
+    "ServingEngine",
+]

@@ -1,0 +1,220 @@
+"""Batched, query-aware ANN serving engine over a built :class:`SCIndex`.
+
+The TaCo query (paper Alg. 6) is a pure function of (index, queries, cfg),
+which makes serving a batching problem: the request path here turns a
+stream of independent :class:`AnnRequest`\\ s into a small number of padded,
+jit-compiled query executions.
+
+Request path
+------------
+``submit()`` enqueues; ``drain()`` repeatedly
+
+  1. groups queued requests by their *effective* ``(k, cfg)`` — a
+     per-request ``beta`` override becomes ``dataclasses.replace(cfg,
+     beta=...)``, so overrides are first-class while steady-state traffic
+     with default parameters shares one executable;
+  2. micro-batches up to ``max_batch`` requests of a group and pads the
+     query matrix up to a shape bucket (:mod:`repro.serving.batching` —
+     every row of the TaCo query path is independent, so padding cannot
+     change real-row results);
+  3. runs a jit closure cached by ``(bucket, k, cfg)``: steady-state
+     traffic never recompiles, and the compile counter says so;
+  4. demuxes per-request ids/dists (+ the ``truncated`` stat) and records
+     telemetry: p50/p99 latency, queries/sec, candidate-truncation rate,
+     per-bucket compile counts.
+
+``search()`` is the synchronous convenience wrapper (submit all, drain,
+return in request order). Future scaling layers (sharded-index serving,
+async queues, result caches — see ROADMAP) plug in around this queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict, deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import SCConfig
+from repro.core.taco import SCIndex, query_with_stats
+from repro.serving.batching import ANN_BATCH_BUCKETS, bucket_size, pad_rows
+
+
+@dataclasses.dataclass
+class AnnRequest:
+    """One k-ANNS query: vector + optional per-request parameter overrides."""
+
+    query: np.ndarray  # (d,) float32
+    k: int | None = None  # result count; default cfg.k
+    beta: float | None = None  # re-rank budget ratio; default cfg.beta
+
+
+@dataclasses.dataclass
+class AnnResult:
+    ids: np.ndarray  # (k,) int32; -1 where fewer than k neighbors
+    dists: np.ndarray  # (k,) float32 squared distances; inf on -1 slots
+    truncated: bool  # candidate set hit the static cap for this query
+    latency_s: float  # wall time of the batch that served this request
+
+
+class AnnServingEngine:
+    """Micro-batching ANN server; see module docstring for the request path."""
+
+    def __init__(
+        self,
+        index: SCIndex,
+        cfg: SCConfig,
+        *,
+        max_batch: int = 64,
+        buckets=ANN_BATCH_BUCKETS,
+        max_cached_fns: int = 64,
+    ):
+        self.index = index
+        self.cfg = cfg
+        self.max_batch = int(max_batch)
+        self.buckets = tuple(b for b in buckets if b <= self.max_batch) or (
+            self.max_batch,
+        )
+        # LRU over compiled executables: (bucket, k, cfg) is client-
+        # controlled via overrides, so without eviction a stream of novel
+        # beta values would grow executable memory without bound.
+        self.max_cached_fns = int(max_cached_fns)
+        self._queue: deque = deque()  # (request_id, AnnRequest)
+        self._next_id = 0
+        self._fns: OrderedDict = OrderedDict()  # (bucket, k, cfg) -> jit fn
+        self.compile_counts: dict = {}  # same key -> #times compiled
+        self._latencies: list[float] = []
+        self._served = 0
+        self._batches = 0
+        self._truncated = 0
+        self._busy_s = 0.0
+
+    # ------------------------------------------------------------- queue --
+    def submit(self, request: AnnRequest) -> int:
+        """Enqueue a request; returns its id (the key into drain()'s dict).
+
+        Validates eagerly: a malformed request must fail here, at its own
+        call site, not crash a later drain() batch that also carries other
+        callers' requests."""
+        d = self.index.data.shape[1]
+        q = np.asarray(request.query, np.float32)
+        if q.shape != (d,):
+            raise ValueError(f"query shape {q.shape} != ({d},)")
+        if request.k is not None:
+            k = int(request.k)
+            if not 0 < k <= self.index.n:
+                raise ValueError(f"k={request.k} out of range (0, {self.index.n}]")
+        if request.beta is not None and not 0.0 < float(request.beta) <= 1.0:
+            raise ValueError(f"beta={request.beta} out of range (0, 1]")
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append((rid, request))
+        return rid
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def drain(self) -> dict[int, AnnResult]:
+        """Serve everything queued; returns {request_id: AnnResult}."""
+        out: dict[int, AnnResult] = {}
+        while self._queue:
+            group_key = self._effective(self._queue[0][1])
+            batch: list = []
+            deferred: deque = deque()
+            while self._queue and len(batch) < self.max_batch:
+                rid, req = self._queue.popleft()
+                if self._effective(req) == group_key:
+                    batch.append((rid, req))
+                else:
+                    deferred.append((rid, req))
+            deferred.extend(self._queue)
+            self._queue = deferred
+            self._run_batch(group_key, batch, out)
+        return out
+
+    def search(self, requests) -> list[AnnResult]:
+        """Synchronous convenience: serve `requests`, results in order."""
+        rids = [self.submit(r) for r in requests]
+        results = self.drain()
+        return [results[rid] for rid in rids]
+
+    # ------------------------------------------------------ compiled path --
+    def _effective(self, req: AnnRequest) -> tuple[int, SCConfig]:
+        k = self.cfg.k if req.k is None else int(req.k)
+        cfg = self.cfg
+        if req.beta is not None and req.beta != cfg.beta:
+            cfg = dataclasses.replace(cfg, beta=float(req.beta))
+        return k, cfg
+
+    def _fn(self, bucket: int, k: int, cfg: SCConfig):
+        key = (bucket, k, cfg)
+        if key not in self._fns:
+            index = self.index
+
+            @jax.jit
+            def fn(queries):
+                ids, dists, stats = query_with_stats(index, queries, cfg, k=k)
+                # only the O(Q) stats leave the device; the (Q, n) SC matrix
+                # stays internal to the executable
+                return ids, dists, stats["truncated"], stats["candidate_count"]
+
+            self._fns[key] = fn
+            self.compile_counts[key] = self.compile_counts.get(key, 0) + 1
+            while len(self._fns) > self.max_cached_fns:
+                self._fns.popitem(last=False)
+        else:
+            self._fns.move_to_end(key)
+        return self._fns[key]
+
+    def _run_batch(self, group_key, batch, out: dict) -> None:
+        k, cfg = group_key
+        queries = np.stack([np.asarray(r.query, np.float32) for _, r in batch])
+        bucket = bucket_size(len(batch), self.buckets)
+        fn = self._fn(bucket, k, cfg)
+        t0 = time.perf_counter()
+        ids, dists, truncated, _cand = jax.block_until_ready(
+            fn(jnp.asarray(pad_rows(queries, bucket)))
+        )
+        dt = time.perf_counter() - t0
+        ids, dists = np.asarray(ids), np.asarray(dists)
+        truncated = np.asarray(truncated)
+        self._batches += 1
+        self._busy_s += dt
+        for i, (rid, _req) in enumerate(batch):
+            out[rid] = AnnResult(
+                ids=ids[i],
+                dists=dists[i],
+                truncated=bool(truncated[i]),
+                latency_s=dt,
+            )
+            self._latencies.append(dt)
+            self._truncated += int(truncated[i])
+            self._served += 1
+
+    # --------------------------------------------------------- telemetry --
+    def reset_telemetry(self) -> None:
+        """Zero the traffic counters (e.g. after warm-up); the jit cache and
+        its compile counts describe the engine's lifetime and are kept."""
+        self._latencies = []
+        self._served = 0
+        self._batches = 0
+        self._truncated = 0
+        self._busy_s = 0.0
+
+    def telemetry(self) -> dict:
+        lat = np.asarray(self._latencies, np.float64)
+        per_bucket: dict[int, int] = {}
+        for (bucket, _k, _cfg), c in self.compile_counts.items():
+            per_bucket[bucket] = per_bucket.get(bucket, 0) + c
+        return {
+            "requests_served": self._served,
+            "batches": self._batches,
+            "queries_per_sec": self._served / self._busy_s if self._busy_s else 0.0,
+            "latency_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
+            "latency_p99_s": float(np.percentile(lat, 99)) if lat.size else 0.0,
+            "truncation_rate": self._truncated / self._served if self._served else 0.0,
+            "compiles_total": sum(self.compile_counts.values()),
+            "compiles_per_bucket": per_bucket,
+        }

@@ -29,13 +29,6 @@ class Request:
     eos_id: int | None = None
 
 
-def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024)) -> int:
-    for b in buckets:
-        if n <= b:
-            return b
-    return ((n + 1023) // 1024) * 1024
-
-
 class ServingEngine:
     def __init__(self, params, cfg: ArchConfig, *, max_seq: int = 512,
                  batch_slots: int = 4, seed: int = 0):

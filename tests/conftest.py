@@ -1,5 +1,20 @@
+import os
+import sys
+
 import numpy as np
 import pytest
+
+# The real `hypothesis` package is preferred; offline containers that can't
+# install it get a deterministic fixed-example fallback so the property
+# tests still run (see tests/_hypothesis_fallback.py) instead of erroring
+# at collection.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()
 
 from repro.data import gmm_dataset, make_queries
 
