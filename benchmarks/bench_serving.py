@@ -10,26 +10,32 @@ Two baselines bracket the status quo:
     micro-batching win from the compile-amortization win.
 
 The engine micro-batches the same request stream into padded shape
-buckets with a jit cache keyed on (bucket, k, cfg).
+buckets with a jit cache keyed on (bucket, k, cfg). ``--shards N`` also
+times the corpus-sharded backend (``backend="sharded"``) on an N-way data
+mesh, reported alongside the single-device numbers; on a CPU dev box the
+devices are forced via ``XLA_FLAGS=--xla_force_host_platform_device_count``
+(set before jax initializes — hence the deferred imports).
 
   PYTHONPATH=src python benchmarks/bench_serving.py [--n 20000] [--d 64] \
-      [--requests 32] [--pressure 16]
+      [--requests 32] [--pressure 16] [--shards 4]
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import numpy as np
 
-from repro.core import build, make_query_fn, query, taco_config
-from repro.data import gmm_dataset, make_queries
-from repro.serving import AnnRequest, AnnServingEngine
+def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0):
+    import jax
+    import numpy as np
 
+    from repro.core import build, make_query_fn, taco_config
+    from repro.data import even_shard_total, gmm_dataset, make_queries
+    from repro.serving import AnnRequest, AnnServingEngine
 
-def bench(n=20000, d=64, k=10, requests=32, pressure=16, seed=0):
-    data, held_out = make_queries(gmm_dataset(n, d, seed=seed), 128)
+    data, held_out = make_queries(
+        gmm_dataset(even_shard_total(n, 128, shards), d, seed=seed), 128
+    )
     cfg = taco_config(n_subspaces=6, subspace_dim=8, n_clusters=1024,
                       alpha=0.05, beta=0.02, k=k)
     print(f"building TaCo index: n={data.shape[0]} d={d} ...", flush=True)
@@ -53,22 +59,37 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, seed=0):
     cached_s = time.perf_counter() - t0
 
     # --- batched engine: waves of `pressure` concurrent requests ----------
-    engine = AnnServingEngine(index, cfg, max_batch=max(pressure, 1))
-    engine.search([AnnRequest(query=q) for q in qs[:pressure]])  # warm
-    engine.reset_telemetry()
-    t0 = time.perf_counter()
-    for lo in range(0, requests, pressure):
-        engine.search([AnnRequest(query=q) for q in qs[lo : lo + pressure]])
-    engine_s = time.perf_counter() - t0
+    def run_engine(backend, **bk):
+        engine = AnnServingEngine(index, cfg, max_batch=max(pressure, 1),
+                                  backend=backend, **bk)
+        engine.search([AnnRequest(query=q) for q in qs[:pressure]])  # warm
+        engine.reset_telemetry()
+        t0 = time.perf_counter()
+        for lo in range(0, requests, pressure):
+            engine.search([AnnRequest(query=q) for q in qs[lo : lo + pressure]])
+        return engine, time.perf_counter() - t0
+
+    engine, engine_s = run_engine("single")
+    rows = [("adhoc-jit", adhoc_s), ("cached-jit", cached_s), ("engine", engine_s)]
+
+    sharded_t = None
+    if shards > 1:
+        sharded_engine, sharded_s = run_engine("sharded", shards=shards)
+        rows.append((f"engine-{shards}shard", sharded_s))
+        sharded_t = sharded_engine.telemetry()
 
     t = engine.telemetry()
-    rows = [("adhoc-jit", adhoc_s), ("cached-jit", cached_s), ("engine", engine_s)]
     print(f"requests={requests} pressure={pressure}")
     for name, secs in rows:
-        print(f"  {name:10s}: {secs:7.3f}s  {requests / secs:8.0f} queries/s")
+        print(f"  {name:14s}: {secs:7.3f}s  {requests / secs:8.0f} queries/s")
     print(f"  engine p50 {t['latency_p50_s'] * 1e3:.2f} ms  p99 "
           f"{t['latency_p99_s'] * 1e3:.2f} ms  trunc {t['truncation_rate']:.3f}  "
           f"compiles {t['compiles_per_bucket']}")
+    if sharded_t is not None:
+        print(f"  sharded p50 {sharded_t['latency_p50_s'] * 1e3:.2f} ms  "
+              f"combine {sharded_t['combine_pairs_per_query']:.0f} pairs/query  "
+              f"per-shard candidates/query "
+              f"{[round(c) for c in sharded_t['shard_candidates_mean']]}")
     print(f"  speedup vs adhoc : {adhoc_s / engine_s:7.2f}x")
     print(f"  speedup vs cached: {cached_s / engine_s:7.2f}x")
     return adhoc_s / engine_s
@@ -81,12 +102,19 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--pressure", type=int, default=16)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="also bench the sharded backend on this many devices")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.pressure < 1:
         ap.error("--pressure must be >= 1")
+    if args.shards > 1:
+        # must precede any jax import/initialization (CPU dev boxes)
+        from repro.launch.hostdev import force_host_devices
+
+        force_host_devices(args.shards)
     bench(n=args.n, d=args.d, k=args.k, requests=args.requests,
-          pressure=args.pressure, seed=args.seed)
+          pressure=args.pressure, shards=args.shards, seed=args.seed)
 
 
 if __name__ == "__main__":

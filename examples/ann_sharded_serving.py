@@ -1,0 +1,64 @@
+"""Sharded-index ANN serving walkthrough: one AnnServingEngine front-end,
+two backends. Builds a TaCo index, serves the same request stream through
+the single-device backend and the corpus-sharded backend (4-way data mesh
+on forced CPU host devices), checks they return identical results, and
+reads the per-shard telemetry.
+
+    PYTHONPATH=src python examples/ann_sharded_serving.py
+"""
+# Force 4 host devices BEFORE jax initializes (CPU dev-box stand-in for a
+# real accelerator mesh).
+from repro.launch.hostdev import force_host_devices
+
+force_host_devices(4)
+
+import numpy as np
+
+from repro.core import build, taco_config
+from repro.data import even_shard_total, gmm_dataset, make_queries
+from repro.serving import AnnRequest, AnnServingEngine
+
+
+def main():
+    n = even_shard_total(10000, 32, 4)  # corpus splits evenly over 4 shards
+    data, queries = make_queries(gmm_dataset(n, 64, seed=0), 32)
+    cfg = taco_config(n_subspaces=4, subspace_dim=8, n_clusters=256,
+                      alpha=0.05, beta=0.02, k=10)
+    index = build(data, cfg)
+
+    requests = [AnnRequest(query=q) for q in queries[:8]]
+    requests.append(AnnRequest(query=queries[8], k=3))  # per-request override
+
+    single = AnnServingEngine(index, cfg, max_batch=16)
+    sharded = AnnServingEngine(index, cfg, max_batch=16, backend="sharded",
+                               shards=4)
+
+    r_single = single.search(requests)
+    r_sharded = sharded.search(requests)
+
+    # The sharded query psums the per-shard SC histograms, so every shard
+    # cuts at the global Algorithm-5 threshold: results are identical to
+    # single-device (whenever no shard truncates — see telemetry below).
+    for a, b in zip(r_single, r_sharded):
+        assert np.array_equal(a.ids, b.ids), (a.ids, b.ids)
+        assert np.allclose(a.dists, b.dists)
+    print(f"{len(requests)} requests: sharded results == single-device results")
+
+    t = sharded.telemetry()
+    mean_c = [round(c, 1) for c in t["shard_candidates_mean"]]
+    print(f"backend={t['backend']} shards={t['shards']} "
+          f"batches={t['batches']} compiles={t['compiles_per_bucket']}")
+    print(f"per-shard candidates/query {mean_c} "
+          f"(sum ~= the single-device beta*n budget, split data-adaptively)")
+    print(f"combine all-gather: {t['combine_pairs_per_query']:.0f} id/dist "
+          f"pairs/query  shard truncation {max(t['shard_truncation_rate']):.3f}")
+
+    # steady state: a second wave reuses the compiled sharded executables
+    before = t["compiles_total"]
+    sharded.search([AnnRequest(query=q) for q in queries[16:24]])
+    assert sharded.telemetry()["compiles_total"] == before
+    print("second wave reused the compiled sharded executable (no recompile)")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,19 +9,30 @@ model axis. Per device:
           cell sizes  -> psum of local bincounts (activation needs GLOBAL
                          cell populations so tau has the paper's semantics)
   query:  activation thresholds tau are computed redundantly on every device
-          (inputs are replicated and tiny: (Q, sqrt_k) distances);
-          SC-scores / selection / re-rank run on LOCAL points only;
+          (inputs are replicated and tiny: (Q, sqrt_k) distances; alpha*n
+          stays GLOBAL so tau has the paper's semantics);
+          SC-scores run on LOCAL points only; the per-query SC-score
+          histograms are psummed over the data axes so every shard applies
+          the SAME Algorithm-5 threshold against the GLOBAL beta*n budget —
+          the total re-ranked candidate count therefore equals the
+          single-device count (<= ~beta*n_global) no matter the shard
+          count, and each shard re-ranks exactly its share of the global
+          candidate set (per-shard static cap: 4*beta*n_local — the
+          budget-derived cap over the shard's share — floored at k);
           each device emits its local top-k, one all-gather over the data
           axes (k * n_shards (id, dist) pairs — bytes, not vectors), then a
-          global top-k. Exact: re-rank distances are exact per shard.
+          global top-k. Exact: re-rank distances are exact per shard, so
+          sharded results are identical to single-device results whenever
+          no shard truncates (surfaced via the per-shard stats).
 
-Communication per query batch: one all-gather of (Q_local, shards*k) pairs.
-There is NO all-to-all and no point-vector movement — this is what makes the
-subspace-collision family a good fit for 1000+ node serving.
+Communication per query batch: one psum of (Q_local, N_s+1) int32 histograms
+plus one all-gather of (Q_local, shards*k) pairs. There is NO all-to-all and
+no point-vector movement — this is what makes the subspace-collision family
+a good fit for 1000+ node serving.
 """
 from __future__ import annotations
 
-from functools import partial
+import math
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +44,12 @@ from repro.core.activation import activation_taus
 from repro.core.config import SCConfig
 from repro.core.imi import split_halves
 from repro.core.scoring import sc_scores
-from repro.core.selection import select_candidates
+from repro.core.selection import (
+    compact_above_threshold,
+    query_aware_threshold,
+    sc_histogram,
+    select_candidates,
+)
 from repro.core.taco import SCIndex, _sub_slices, rerank
 from repro.utils import pairwise_sq_dists, topk_smallest
 
@@ -76,26 +92,50 @@ def _project_local(index: SCIndex, x: jax.Array) -> jax.Array:
     return x[:, index.dim_perm]
 
 
-def make_distributed_query(
+def make_distributed_query_with_stats(
     mesh,
     cfg: SCConfig,
     index: SCIndex,
     n_global: int,
     data_axes=("data",),
     query_axes=("model",),
+    k: int | None = None,
 ):
-    """Returns a jit-able ``fn(index, queries) -> (ids, sq_dists)`` where the
-    index is sharded per :func:`index_pspecs` and queries over query_axes.
+    """Returns a jit-able ``fn(index, queries) -> (ids, sq_dists, stats)``
+    where the index is sharded per :func:`index_pspecs` and queries over
+    query_axes. ``k`` overrides ``cfg.k`` per closure (static Python int —
+    mirrors :func:`repro.core.taco.query_with_stats`, so the serving engine
+    keys its jit cache on it).
+
+    ``stats`` (all shapes (Q, S) for S data shards, shard-major in
+    all-gather order):
+
+      * ``shard_candidates`` — pre-clamp per-shard candidate demand; sums
+        over shards to the single-device global demand for query-aware
+        selection (the histogram psum makes every shard cut at the global
+        Algorithm-5 threshold).
+      * ``shard_truncated``  — per-shard demand exceeded the shard's static
+        cap (``max(4*beta*n_local, k)``, or ``candidate_cap`` per shard);
+        any truncation voids the sharded == single-device exactness
+        guarantee.
 
     Billion-scale configuration: shard the corpus over ALL mesh axes
     (``data_axes=("data", "model")``, 256/512-way — 1B x 128d = 2 GB/device)
     and replicate the query batch (``query_axes=()``); the combine all-gather
     then runs over every axis but still moves only (Q, shards*k) id/dist
     pairs."""
+    k = cfg.k if k is None else int(k)
     query_axes = tuple(query_axes)
+    data_axes = tuple(data_axes)
     specs = index_pspecs(index, data_axes)
     alpha_n = cfg.alpha * n_global
     beta_n = float(cfg.beta * n_global)
+    n_shards = math.prod(mesh.shape[ax] for ax in data_axes)
+    if k > n_global // n_shards:
+        raise ValueError(
+            f"k={k} exceeds the {n_global // n_shards}-point shard: every "
+            f"shard must hold at least k points to emit its local top-k"
+        )
 
     def local_query(idx: SCIndex, queries: jax.Array):
         n_local = idx.data.shape[0]
@@ -112,11 +152,34 @@ def make_distributed_query(
         a1s = jnp.stack([s.assign1 for s in idx.subspaces])
         a2s = jnp.stack([s.assign2 for s in idx.subspaces])
         sc = sc_scores(jnp.stack(d1s), jnp.stack(d2s), a1s, a2s, jnp.stack(taus))
-        cap = min(cfg.cap_for(n_global), n_local)
-        cand_ids, valid, _t, _c = select_candidates(
-            sc, beta_n, cfg.n_subspaces, cap, mode=cfg.selection
+        # Per-shard static cap sized from the shard's SHARE of the global
+        # budget (4*beta*n_local, the same 4x headroom as cap_for), floored
+        # only at the runtime k each shard needs to emit its local top-k —
+        # NOT at cap_for's 4*cfg.k, which would scale total static re-rank
+        # work as S*4k in the many-shard regime. An explicit candidate_cap
+        # is a per-shard cap (as in the billion-scale dry-run config).
+        base = (
+            cfg.candidate_cap
+            if cfg.candidate_cap is not None
+            else math.ceil(4 * cfg.beta * n_local)
         )
-        ids_local, dists_local = rerank(idx.data, queries, cand_ids, valid, cfg.k)
+        cap = min(n_local, max(base, k))
+        if cfg.selection == "query_aware":
+            # The budget is GLOBAL: psum the local SC-score histograms so
+            # every shard walks Algorithm 5 on the global histogram against
+            # the global beta*n budget and cuts at the same threshold.
+            # Total selected across shards == the single-device count —
+            # NOT S * beta * n as the old per-shard-budget code did.
+            hist = jax.lax.psum(sc_histogram(sc, cfg.n_subspaces), data_axes)
+            thresh, _ = query_aware_threshold(hist, beta_n, cfg.n_subspaces)
+            cand_ids, valid, count = compact_above_threshold(sc, thresh, cap)
+        else:
+            # fixed selection ranks by LOCAL score order, so the global
+            # rank cut is approximated by an even split of the budget.
+            cand_ids, valid, _t, count = select_candidates(
+                sc, beta_n / n_shards, cfg.n_subspaces, cap, mode=cfg.selection
+            )
+        ids_local, dists_local = rerank(idx.data, queries, cand_ids, valid, k)
 
         # globalize ids and combine across data shards
         shard_off = jnp.int32(0)
@@ -125,17 +188,49 @@ def make_distributed_query(
         ids_global = jnp.where(ids_local >= 0, ids_local + shard_off * n_local, -1)
         all_ids = jax.lax.all_gather(ids_global, data_axes, axis=1, tiled=True)
         all_d = jax.lax.all_gather(dists_local, data_axes, axis=1, tiled=True)
-        top_d, pos = topk_smallest(all_d, cfg.k)
-        return jnp.take_along_axis(all_ids, pos, axis=1), top_d
+        top_d, pos = topk_smallest(all_d, k)
+        stats = {
+            "shard_candidates": jax.lax.all_gather(
+                count[:, None], data_axes, axis=1, tiled=True
+            ),
+            "shard_truncated": jax.lax.all_gather(
+                (count > cap)[:, None], data_axes, axis=1, tiled=True
+            ),
+        }
+        return jnp.take_along_axis(all_ids, pos, axis=1), top_d, stats
 
+    q_spec = P(query_axes, None)
     fn = shard_map(
         local_query,
         mesh=mesh,
-        in_specs=(specs, P(query_axes, None)),
-        out_specs=(P(query_axes, None), P(query_axes, None)),
+        in_specs=(specs, q_spec),
+        out_specs=(q_spec, q_spec, {"shard_candidates": q_spec, "shard_truncated": q_spec}),
         check_vma=False,
     )
     return jax.jit(fn)
+
+
+def make_distributed_query(
+    mesh,
+    cfg: SCConfig,
+    index: SCIndex,
+    n_global: int,
+    data_axes=("data",),
+    query_axes=("model",),
+):
+    """Stats-free ``fn(index, queries) -> (ids, sq_dists)`` — see
+    :func:`make_distributed_query_with_stats` (XLA dead-code-eliminates the
+    stat gathers from this variant)."""
+    stats_fn = make_distributed_query_with_stats(
+        mesh, cfg, index, n_global, data_axes=data_axes, query_axes=query_axes
+    )
+
+    @jax.jit
+    def fn(idx: SCIndex, queries: jax.Array):
+        ids, dists, _stats = stats_fn(idx, queries)
+        return ids, dists
+
+    return fn
 
 
 # ---------------------------------------------------------------------------

@@ -18,6 +18,7 @@ the lowest-index above-threshold points rather than the highest-SC ones.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
@@ -72,14 +73,51 @@ def _alg5_threshold_reference(hist_row, beta_n: float, n_subspaces: int) -> int:
     return last
 
 
+def fixed_budget(beta_n: float, n: int) -> int:
+    """Fixed-selection re-rank budget: ceil(beta*n), clamped to [1, n].
+
+    The paper protocol takes the ceiling — a fractional budget still covers
+    the point it partially reaches (NOT round(), which under-budgets for
+    fractions below .5).
+    """
+    return int(min(max(1, math.ceil(beta_n)), n))
+
+
 def fixed_threshold(sc: jax.Array, beta_n: float, n_subspaces: int):
     """SuCo baseline: a fixed beta*n candidate budget for every query.
     The threshold is the SC-score of the ceil(beta_n)-th best point."""
     q, n = sc.shape
-    budget = int(min(max(1, round(beta_n)), n))
+    budget = fixed_budget(beta_n, n)
     kth = jax.lax.top_k(sc, budget)[0][:, -1]  # value of budget-th largest
     # fixed mode always re-ranks exactly `budget` points (rank-truncated ties)
     return kth.astype(jnp.int32), jnp.full((q,), budget, jnp.int32)
+
+
+def compact_above_threshold(sc: jax.Array, thresh: jax.Array, cap: int):
+    """Stream-compact the ids with ``sc >= thresh`` into ``cap`` static slots.
+
+    One cumsum + one scatter (O(n) — no sort): the candidate slot of each
+    above-threshold point is its rank in index order. Returns
+    (ids (Q, cap) int32, valid (Q, cap) bool, count (Q,) int32) where
+    ``count`` is the PRE-clamp demand — the true number of above-threshold
+    points, which may exceed ``cap``; callers flag truncation as
+    ``count > cap``. ``valid`` masks the min(count, cap) filled slots.
+    Factored out of :func:`select_candidates` so the distributed query can
+    apply an externally agreed (globally psummed) threshold per shard.
+    """
+    q, n = sc.shape
+    mask = sc >= thresh[:, None]
+    count = jnp.sum(mask, axis=1).astype(jnp.int32)
+    pos = jnp.cumsum(mask, axis=1) - 1  # candidate slot, index order
+    slot = jnp.where(mask & (pos < cap), pos, cap)  # cap = dumpster col
+    point_ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (q, n))
+    ids = (
+        jnp.zeros((q, cap + 1), jnp.int32)
+        .at[jnp.arange(q)[:, None], slot]
+        .set(point_ids)[:, :cap]
+    )
+    valid = jnp.arange(cap)[None, :] < jnp.minimum(count, cap)[:, None]
+    return ids, valid, count
 
 
 @partial(jax.jit, static_argnames=("beta_n", "cap", "n_subspaces", "mode"))
@@ -94,29 +132,23 @@ def select_candidates(
 
     Returns (ids (Q, cap) int32, valid (Q, cap) bool, threshold (Q,),
     cand_count (Q,)). ``valid`` masks out both sub-threshold points (query-
-    aware mode) and beyond-budget points (fixed mode).
+    aware mode) and beyond-budget points (fixed mode). ``cand_count`` is the
+    pre-clamp demand: ``cand_count > cap`` means the static cap truncated
+    real candidates, ``cand_count == cap`` means an exact fit with nothing
+    dropped (callers must test ``>``, not ``>=``).
     """
     q, n = sc.shape
     if mode == "query_aware":
         hist = sc_histogram(sc, n_subspaces)
-        thresh, count = query_aware_threshold(hist, beta_n, n_subspaces)
-        # Stream-compact the >= thresh candidates (one cumsum + one scatter,
-        # O(n)) instead of top_k over sc (O(n log n) and ~10x slower on CPU).
-        # The candidate SET is identical whenever count <= cap — the regime
-        # cap is sized for (see module docstring); downstream re-ranking is
-        # order-independent, so slot order (index vs score) never matters.
-        # Under truncation the kept cap-subset is by index, not by score.
-        mask = sc >= thresh[:, None]
-        pos = jnp.cumsum(mask, axis=1) - 1  # candidate slot, index order
-        slot = jnp.where(mask & (pos < cap), pos, cap)  # cap = dumpster col
-        point_ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (q, n))
-        ids = (
-            jnp.zeros((q, cap + 1), jnp.int32)
-            .at[jnp.arange(q)[:, None], slot]
-            .set(point_ids)[:, :cap]
-        )
-        valid = jnp.arange(cap)[None, :] < jnp.minimum(count, cap)[:, None]
-        return ids, valid, thresh, jnp.minimum(count, cap)
+        thresh, _count = query_aware_threshold(hist, beta_n, n_subspaces)
+        # Stream-compaction instead of top_k over sc (O(n log n) and ~10x
+        # slower on CPU). The candidate SET is identical whenever
+        # count <= cap — the regime cap is sized for (see module docstring);
+        # downstream re-ranking is order-independent, so slot order (index
+        # vs score) never matters. Under truncation the kept cap-subset is
+        # by index, not by score.
+        ids, valid, count = compact_above_threshold(sc, thresh, cap)
+        return ids, valid, thresh, count
     elif mode == "fixed":
         thresh, count = fixed_threshold(sc, beta_n, n_subspaces)
     else:
@@ -125,6 +157,5 @@ def select_candidates(
     top_sc, ids = jax.lax.top_k(sc, cap)
     valid = top_sc >= thresh[:, None]
     # fixed budget: also cut ties beyond beta_n by rank
-    budget = int(min(max(1, round(beta_n)), n))
-    valid = valid & (jnp.arange(cap)[None, :] < budget)
-    return ids.astype(jnp.int32), valid, thresh, jnp.minimum(count, cap)
+    valid = valid & (jnp.arange(cap)[None, :] < fixed_budget(beta_n, n))
+    return ids.astype(jnp.int32), valid, thresh, count

@@ -192,7 +192,8 @@ def query_with_stats(
     k = cfg.k if k is None else int(k)
     queries = jnp.asarray(queries, jnp.float32)
     sc, stats = compute_sc_scores(index, queries, cfg)
-    cap = cfg.cap_for(index.n)
+    # floor the cap at the runtime k so large-k overrides stay servable
+    cap = min(index.n, max(cfg.cap_for(index.n), k))
     cand_ids, valid, thresh, count = select_candidates(
         sc, float(cfg.beta * index.n), cfg.n_subspaces, cap, mode=cfg.selection
     )
@@ -200,8 +201,9 @@ def query_with_stats(
     stats = dict(
         stats,
         sc_threshold=thresh,
-        candidate_count=count,
-        truncated=count >= cap,
+        candidate_count=jnp.minimum(count, cap),  # actually re-ranked
+        candidate_demand=count,  # pre-clamp Alg. 5 demand (may exceed cap)
+        truncated=count > cap,  # strictly: count == cap drops nothing
         sc=sc,
     )
     return ids, dists, stats

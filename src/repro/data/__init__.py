@@ -1,3 +1,13 @@
-from repro.data.vectors import gmm_dataset, spiked_covariance_dataset, make_queries
+from repro.data.vectors import (
+    even_shard_total,
+    gmm_dataset,
+    make_queries,
+    spiked_covariance_dataset,
+)
 
-__all__ = ["gmm_dataset", "spiked_covariance_dataset", "make_queries"]
+__all__ = [
+    "even_shard_total",
+    "gmm_dataset",
+    "make_queries",
+    "spiked_covariance_dataset",
+]

@@ -3,21 +3,20 @@
 Builds a TaCo index over synthetic Gaussian-mixture data, then serves a
 stream of requests in waves of ``--pressure`` concurrent requests
 (mirroring launch/serve.py for the LM engine). ``--mixed`` sprinkles
-per-request k/beta overrides to exercise the grouping path.
+per-request k/beta overrides to exercise the grouping path. ``--shards N``
+serves through the corpus-sharded backend (``backend="sharded"``) on an
+N-way data mesh — on a CPU dev box the devices are forced via
+``XLA_FLAGS=--xla_force_host_platform_device_count``, which must be set
+before jax initializes, so all jax-importing modules are imported inside
+``main()`` after argument parsing.
 
 Example (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve_ann --n 20000 --d 64 \
-      --requests 64 --pressure 16
+      --requests 64 --pressure 16 --shards 4
 """
 from __future__ import annotations
 
 import argparse
-
-import numpy as np
-
-from repro.core import build, taco_config
-from repro.data import gmm_dataset, make_queries
-from repro.serving import AnnRequest, AnnServingEngine
 
 
 def main(argv=None):
@@ -31,19 +30,36 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--mixed", action="store_true",
                     help="vary k/beta across requests (exercises grouping)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve corpus-sharded over this many devices "
+                         "(0 = single-device backend)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.pressure < 1:
         ap.error("--pressure must be >= 1")
+    if args.shards < 0:
+        ap.error("--shards must be >= 0")
+    if args.shards > 1:
+        # CPU dev: force host devices BEFORE any jax import/initialization
+        # (hostdev is the one launch module that never imports jax).
+        from repro.launch.hostdev import force_host_devices
 
-    data, held_out = make_queries(gmm_dataset(args.n, args.d, seed=args.seed),
-                                  max(args.requests, 1))
+        force_host_devices(args.shards)
+
+    import numpy as np
+
+    from repro.core import build, taco_config
+    from repro.data import even_shard_total, gmm_dataset, make_queries
+    from repro.serving import AnnRequest, AnnServingEngine
+
+    held = max(args.requests, 1)
+    n = even_shard_total(args.n, held, args.shards)
+    data, held_out = make_queries(gmm_dataset(n, args.d, seed=args.seed), held)
     cfg = taco_config(n_subspaces=6, subspace_dim=8, n_clusters=1024,
                       alpha=0.05, beta=0.02, k=args.k)
     print(f"building TaCo index: n={data.shape[0]} d={args.d} ...", flush=True)
     index = build(data, cfg)
 
-    rng = np.random.default_rng(args.seed)
     reqs = []
     for i in range(args.requests):
         k = args.k
@@ -54,7 +70,10 @@ def main(argv=None):
             beta = cfg.beta * 2
         reqs.append(AnnRequest(query=held_out[i % held_out.shape[0]], k=k, beta=beta))
 
-    engine = AnnServingEngine(index, cfg, max_batch=args.max_batch)
+    backend = "sharded" if args.shards > 1 else "single"
+    engine = AnnServingEngine(index, cfg, max_batch=args.max_batch,
+                              backend=backend,
+                              shards=args.shards if args.shards > 1 else None)
     # warm the steady-state executables, then serve in waves
     engine.search(reqs[: min(args.pressure, len(reqs))])
     engine.reset_telemetry()
@@ -63,12 +82,18 @@ def main(argv=None):
         results.extend(engine.search(reqs[lo : lo + args.pressure]))
 
     t = engine.telemetry()
-    print(f"served {len(results)} requests in {t['batches']} batches")
+    print(f"served {len(results)} requests in {t['batches']} batches "
+          f"[{t['backend']}, {t['shards']} shard(s)]")
     print(f"  p50 latency {t['latency_p50_s'] * 1e3:.2f} ms   "
           f"p99 {t['latency_p99_s'] * 1e3:.2f} ms   "
           f"{t['queries_per_sec']:.0f} queries/s")
     print(f"  truncation rate {t['truncation_rate']:.3f}   "
           f"compiles {t['compiles_total']} {t['compiles_per_bucket']}")
+    if t["shards"] > 1:
+        mean_c = ", ".join(f"{c:.0f}" for c in t["shard_candidates_mean"])
+        print(f"  per-shard candidates/query [{mean_c}]   "
+              f"combine {t['combine_pairs_per_query']:.0f} id/dist pairs/query   "
+              f"shard trunc max {max(t['shard_truncation_rate']):.3f}")
     for i, r in enumerate(results[:4]):
         print(f"  req{i}: ids[:5]={r.ids[:5].tolist()} "
               f"d[:3]={np.round(r.dists[:3], 4).tolist()}")

@@ -11,15 +11,29 @@ Two engines share the micro-batching helpers in
     into padded shape buckets, jit-cached per ``(bucket, k, cfg)`` so
     steady-state query traffic never recompiles; per-request ``k``/``beta``
     overrides; telemetry (p50/p99 latency, QPS, truncation rate, compile
-    counts).
+    counts, per-shard stats). Execution is pluggable via :class:`AnnBackend`:
+    :class:`SingleDeviceAnnBackend` (default) or :class:`ShardedAnnBackend`
+    (corpus-sharded shard_map query over a device mesh).
 """
-from repro.serving.ann_engine import AnnRequest, AnnResult, AnnServingEngine
+from repro.serving.ann_engine import (
+    AnnBackend,
+    AnnBatchResult,
+    AnnRequest,
+    AnnResult,
+    AnnServingEngine,
+    ShardedAnnBackend,
+    SingleDeviceAnnBackend,
+)
 from repro.serving.engine import Request, ServingEngine
 
 __all__ = [
+    "AnnBackend",
+    "AnnBatchResult",
     "AnnRequest",
     "AnnResult",
     "AnnServingEngine",
     "Request",
     "ServingEngine",
+    "ShardedAnnBackend",
+    "SingleDeviceAnnBackend",
 ]

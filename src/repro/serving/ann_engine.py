@@ -17,19 +17,31 @@ Request path
      query matrix up to a shape bucket (:mod:`repro.serving.batching` —
      every row of the TaCo query path is independent, so padding cannot
      change real-row results);
-  3. runs a jit closure cached by ``(bucket, k, cfg)``: steady-state
-     traffic never recompiles, and the compile counter says so;
+  3. hands the padded batch to the engine's :class:`AnnBackend`, which owns
+     device placement and an LRU of executables keyed ``(bucket, k, cfg)``:
+     steady-state traffic never recompiles, and the compile counter says so;
   4. demuxes per-request ids/dists (+ the ``truncated`` stat) and records
      telemetry: p50/p99 latency, queries/sec, candidate-truncation rate,
-     per-bucket compile counts.
+     per-bucket compile counts, and — for sharded backends — per-shard
+     candidate/truncation stats and the all-gather combine size.
+
+Backends
+--------
+:class:`SingleDeviceAnnBackend` jits :func:`repro.core.taco.query_with_stats`
+on the default device. :class:`ShardedAnnBackend` places the index
+corpus-sharded over a mesh (:func:`repro.core.distributed.index_pspecs`) and
+compiles :func:`repro.core.distributed.make_distributed_query_with_stats`
+executables — same queue, same jit-cache policy, per-shard telemetry.
+Future scaling layers (async queues, result caches — see ROADMAP) plug into
+the same protocol instead of into the engine's batch loop.
 
 ``search()`` is the synchronous convenience wrapper (submit all, drain,
-return in request order). Future scaling layers (sharded-index serving,
-async queues, result caches — see ROADMAP) plug in around this queue.
+return in request order).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import OrderedDict, deque
 
@@ -55,8 +67,186 @@ class AnnRequest:
 class AnnResult:
     ids: np.ndarray  # (k,) int32; -1 where fewer than k neighbors
     dists: np.ndarray  # (k,) float32 squared distances; inf on -1 slots
-    truncated: bool  # candidate set hit the static cap for this query
+    truncated: bool  # candidate set hit a static cap for this query
     latency_s: float  # wall time of the batch that served this request
+    shard_candidates: np.ndarray | None = None  # (S,) per-shard demand (sharded)
+
+
+@dataclasses.dataclass
+class AnnBatchResult:
+    """What a backend returns for one padded batch (one row per slot)."""
+
+    ids: np.ndarray  # (B, k) int32
+    dists: np.ndarray  # (B, k) float32
+    truncated: np.ndarray  # (B,) bool
+    shard_candidates: np.ndarray | None = None  # (B, S) int32
+    shard_truncated: np.ndarray | None = None  # (B, S) bool
+
+
+class AnnBackend:
+    """Executes padded query batches for :class:`AnnServingEngine`.
+
+    The engine owns queueing, grouping, bucketing, demux and telemetry; a
+    backend owns device placement and the ``(bucket, k, cfg)`` -> executable
+    LRU cache. ``(bucket, k, cfg)`` is client-controlled via per-request
+    overrides, so without eviction a stream of novel beta values would grow
+    executable memory without bound.
+    """
+
+    #: data shards the corpus is split over (1 = no sharding)
+    shards: int = 1
+
+    def __init__(self, index: SCIndex, *, max_cached_fns: int = 64):
+        self.index = index
+        self.max_cached_fns = int(max_cached_fns)
+        self._fns: OrderedDict = OrderedDict()  # (bucket, k, cfg) -> callable
+        self.compile_counts: dict = {}  # same key -> #times compiled
+
+    def _fn(self, bucket: int, k: int, cfg: SCConfig):
+        key = (bucket, k, cfg)
+        if key not in self._fns:
+            self._fns[key] = self._compile(bucket, k, cfg)
+            self.compile_counts[key] = self.compile_counts.get(key, 0) + 1
+            while len(self._fns) > self.max_cached_fns:
+                self._fns.popitem(last=False)
+        else:
+            self._fns.move_to_end(key)
+        return self._fns[key]
+
+    def _compile(self, bucket: int, k: int, cfg: SCConfig):
+        """Build the executable for one ``(bucket, k, cfg)`` key."""
+        raise NotImplementedError
+
+    def run(self, bucket: int, k: int, cfg: SCConfig, queries: np.ndarray) -> AnnBatchResult:
+        """Execute one padded ``(bucket, d)`` query batch synchronously."""
+        raise NotImplementedError
+
+
+class SingleDeviceAnnBackend(AnnBackend):
+    """One-device execution: jitted :func:`query_with_stats` closures."""
+
+    def _compile(self, bucket: int, k: int, cfg: SCConfig):
+        index = self.index
+
+        @jax.jit
+        def fn(queries):
+            ids, dists, stats = query_with_stats(index, queries, cfg, k=k)
+            # only the O(Q) stats leave the device; the (Q, n) SC matrix
+            # stays internal to the executable
+            return ids, dists, stats["truncated"]
+
+        return fn
+
+    def run(self, bucket: int, k: int, cfg: SCConfig, queries: np.ndarray) -> AnnBatchResult:
+        ids, dists, truncated = jax.block_until_ready(
+            self._fn(bucket, k, cfg)(jnp.asarray(queries))
+        )
+        return AnnBatchResult(
+            ids=np.asarray(ids),
+            dists=np.asarray(dists),
+            truncated=np.asarray(truncated),
+        )
+
+
+class ShardedAnnBackend(AnnBackend):
+    """Corpus-sharded execution through :mod:`repro.core.distributed`.
+
+    The built index is placed ONCE, sharded over the mesh's data axes per
+    :func:`index_pspecs`; each ``(bucket, k, cfg)`` key compiles a
+    :func:`make_distributed_query_with_stats` executable. Queries are
+    replicated by default (``query_axes=()``) so every bucket size runs on
+    every mesh, and the combine all-gather moves only (Q, shards*k)
+    id/dist pairs per batch.
+    """
+
+    def __init__(
+        self,
+        index: SCIndex,
+        *,
+        mesh=None,
+        shards: int | None = None,
+        data_axes=None,
+        query_axes=(),
+        max_cached_fns: int = 64,
+    ):
+        super().__init__(index, max_cached_fns=max_cached_fns)
+        from jax.sharding import NamedSharding
+
+        from repro.compat import make_mesh
+        from repro.core.distributed import index_pspecs
+
+        if mesh is None:
+            n_dev = len(jax.devices())
+            shards = n_dev if shards is None else int(shards)
+            if not 1 <= shards <= n_dev:
+                raise ValueError(f"shards={shards} out of range [1, {n_dev} devices]")
+            mesh = make_mesh((shards,), ("data",))
+            data_axes = ("data",)
+        elif shards is not None:
+            raise ValueError(
+                "pass either mesh or shards, not both — with an explicit "
+                "mesh the shard count is the product of its data axes"
+            )
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes if data_axes is not None else ("data",))
+        self.query_axes = tuple(query_axes)
+        self.shards = math.prod(mesh.shape[ax] for ax in self.data_axes)
+        if index.n % self.shards:
+            raise ValueError(
+                f"corpus size {index.n} not divisible by {self.shards} shards"
+            )
+        specs = index_pspecs(index, self.data_axes)
+        self._sharded_index = jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(mesh, s)) if s is not None else x,
+            index,
+            specs,
+            is_leaf=lambda x: x is None,
+        )
+
+    def _compile(self, bucket: int, k: int, cfg: SCConfig):
+        from repro.core.distributed import make_distributed_query_with_stats
+
+        return make_distributed_query_with_stats(
+            self.mesh,
+            cfg,
+            self.index,
+            self.index.n,
+            data_axes=self.data_axes,
+            query_axes=self.query_axes,
+            k=k,
+        )
+
+    def run(self, bucket: int, k: int, cfg: SCConfig, queries: np.ndarray) -> AnnBatchResult:
+        ids, dists, stats = jax.block_until_ready(
+            self._fn(bucket, k, cfg)(self._sharded_index, jnp.asarray(queries))
+        )
+        shard_truncated = np.asarray(stats["shard_truncated"])
+        return AnnBatchResult(
+            ids=np.asarray(ids),
+            dists=np.asarray(dists),
+            truncated=shard_truncated.any(axis=1),
+            shard_candidates=np.asarray(stats["shard_candidates"]),
+            shard_truncated=shard_truncated,
+        )
+
+
+def _make_backend(backend, index, *, mesh, shards, max_cached_fns) -> AnnBackend:
+    if backend == "sharded":
+        return ShardedAnnBackend(
+            index, mesh=mesh, shards=shards, max_cached_fns=max_cached_fns
+        )
+    if mesh is not None or shards is not None:
+        # would be silently ignored — a forgotten backend="sharded" must
+        # not degrade to single-device serving without a sound
+        raise ValueError(
+            f"mesh/shards are only consumed by backend='sharded', got "
+            f"backend={backend!r}"
+        )
+    if isinstance(backend, AnnBackend):
+        return backend
+    if backend == "single":
+        return SingleDeviceAnnBackend(index, max_cached_fns=max_cached_fns)
+    raise ValueError(f"unknown backend {backend!r} (want 'single' or 'sharded')")
 
 
 class AnnServingEngine:
@@ -70,6 +260,9 @@ class AnnServingEngine:
         max_batch: int = 64,
         buckets=ANN_BATCH_BUCKETS,
         max_cached_fns: int = 64,
+        backend: str | AnnBackend = "single",
+        mesh=None,
+        shards: int | None = None,
     ):
         self.index = index
         self.cfg = cfg
@@ -77,19 +270,28 @@ class AnnServingEngine:
         self.buckets = tuple(b for b in buckets if b <= self.max_batch) or (
             self.max_batch,
         )
-        # LRU over compiled executables: (bucket, k, cfg) is client-
-        # controlled via overrides, so without eviction a stream of novel
-        # beta values would grow executable memory without bound.
-        self.max_cached_fns = int(max_cached_fns)
+        self.backend = _make_backend(
+            backend, index, mesh=mesh, shards=shards, max_cached_fns=max_cached_fns
+        )
         self._queue: deque = deque()  # (request_id, AnnRequest)
         self._next_id = 0
-        self._fns: OrderedDict = OrderedDict()  # (bucket, k, cfg) -> jit fn
-        self.compile_counts: dict = {}  # same key -> #times compiled
         self._latencies: list[float] = []
         self._served = 0
         self._batches = 0
         self._truncated = 0
         self._busy_s = 0.0
+        self._combine_pairs = 0
+        self._shard_candidates = np.zeros(self.backend.shards, np.int64)
+        self._shard_truncated = np.zeros(self.backend.shards, np.int64)
+
+    # Back-compat views of the jit cache, which now lives on the backend.
+    @property
+    def _fns(self) -> OrderedDict:
+        return self.backend._fns
+
+    @property
+    def compile_counts(self) -> dict:
+        return self.backend.compile_counts
 
     # ------------------------------------------------------------- queue --
     def submit(self, request: AnnRequest) -> int:
@@ -148,50 +350,32 @@ class AnnServingEngine:
             cfg = dataclasses.replace(cfg, beta=float(req.beta))
         return k, cfg
 
-    def _fn(self, bucket: int, k: int, cfg: SCConfig):
-        key = (bucket, k, cfg)
-        if key not in self._fns:
-            index = self.index
-
-            @jax.jit
-            def fn(queries):
-                ids, dists, stats = query_with_stats(index, queries, cfg, k=k)
-                # only the O(Q) stats leave the device; the (Q, n) SC matrix
-                # stays internal to the executable
-                return ids, dists, stats["truncated"], stats["candidate_count"]
-
-            self._fns[key] = fn
-            self.compile_counts[key] = self.compile_counts.get(key, 0) + 1
-            while len(self._fns) > self.max_cached_fns:
-                self._fns.popitem(last=False)
-        else:
-            self._fns.move_to_end(key)
-        return self._fns[key]
-
     def _run_batch(self, group_key, batch, out: dict) -> None:
         k, cfg = group_key
         queries = np.stack([np.asarray(r.query, np.float32) for _, r in batch])
         bucket = bucket_size(len(batch), self.buckets)
-        fn = self._fn(bucket, k, cfg)
         t0 = time.perf_counter()
-        ids, dists, truncated, _cand = jax.block_until_ready(
-            fn(jnp.asarray(pad_rows(queries, bucket)))
-        )
+        res = self.backend.run(bucket, k, cfg, pad_rows(queries, bucket))
         dt = time.perf_counter() - t0
-        ids, dists = np.asarray(ids), np.asarray(dists)
-        truncated = np.asarray(truncated)
         self._batches += 1
         self._busy_s += dt
         for i, (rid, _req) in enumerate(batch):
             out[rid] = AnnResult(
-                ids=ids[i],
-                dists=dists[i],
-                truncated=bool(truncated[i]),
+                ids=res.ids[i],
+                dists=res.dists[i],
+                truncated=bool(res.truncated[i]),
                 latency_s=dt,
+                shard_candidates=None
+                if res.shard_candidates is None
+                else res.shard_candidates[i],
             )
             self._latencies.append(dt)
-            self._truncated += int(truncated[i])
+            self._truncated += int(res.truncated[i])
             self._served += 1
+            self._combine_pairs += self.backend.shards * k
+            if res.shard_candidates is not None:
+                self._shard_candidates += res.shard_candidates[i]
+                self._shard_truncated += res.shard_truncated[i]
 
     # --------------------------------------------------------- telemetry --
     def reset_telemetry(self) -> None:
@@ -202,13 +386,18 @@ class AnnServingEngine:
         self._batches = 0
         self._truncated = 0
         self._busy_s = 0.0
+        self._combine_pairs = 0
+        self._shard_candidates = np.zeros(self.backend.shards, np.int64)
+        self._shard_truncated = np.zeros(self.backend.shards, np.int64)
 
     def telemetry(self) -> dict:
         lat = np.asarray(self._latencies, np.float64)
         per_bucket: dict[int, int] = {}
         for (bucket, _k, _cfg), c in self.compile_counts.items():
             per_bucket[bucket] = per_bucket.get(bucket, 0) + c
-        return {
+        out = {
+            "backend": type(self.backend).__name__,
+            "shards": self.backend.shards,
             "requests_served": self._served,
             "batches": self._batches,
             "queries_per_sec": self._served / self._busy_s if self._busy_s else 0.0,
@@ -218,3 +407,11 @@ class AnnServingEngine:
             "compiles_total": sum(self.compile_counts.values()),
             "compiles_per_bucket": per_bucket,
         }
+        if self.backend.shards > 1:
+            served = max(self._served, 1)
+            # per-shard candidate demand + truncation, and the size of the
+            # all-gather combine (id/dist pairs moved per query: shards*k)
+            out["shard_candidates_mean"] = (self._shard_candidates / served).tolist()
+            out["shard_truncation_rate"] = (self._shard_truncated / served).tolist()
+            out["combine_pairs_per_query"] = self._combine_pairs / served
+        return out

@@ -5,8 +5,9 @@ small ladder of padded shape buckets: the ANN engine buckets query-batch
 sizes today; LM_PROMPT_BUCKETS is the ladder for prefill prompt-length
 bucketing (pending — prompt padding must first be proven safe for the SSM
 mixers, whose recurrent state sees pad tokens). One module owns the
-shape-bucket policy for every future serving path (sharded index, async
-queue).
+shape-bucket policy for every serving path: every `AnnBackend` (single-
+device and sharded alike) receives batches already snapped to this ladder,
+so backends share executables bucket-for-bucket.
 """
 from __future__ import annotations
 

@@ -32,6 +32,15 @@ def test_bucket_size_ladder():
         bucket_size(0, (1, 2))
 
 
+def test_even_shard_total():
+    from repro.data import even_shard_total
+
+    assert even_shard_total(10000, 32, 1) == 10000  # no sharding: no-op
+    n = even_shard_total(10000, 32, 4)
+    assert n <= 10000 and (n - 32) % 4 == 0
+    assert even_shard_total(8192, 16, 8) == (8192 - 16) // 8 * 8 + 16
+
+
 def test_pad_rows():
     x = np.arange(6, dtype=np.float32).reshape(3, 2)
     padded = pad_rows(x, 5)
@@ -162,6 +171,16 @@ def test_submit_rejects_malformed_requests(served_index):
         engine.submit(AnnRequest(query=queries[0], beta=0.0))
     out = engine.drain()
     assert set(out) == {good}  # earlier valid request unaffected
+
+
+def test_engine_rejects_unused_shard_kwargs(served_index):
+    """mesh/shards only apply to backend='sharded'; silently ignoring them
+    would let a forgotten backend= degrade to single-device serving."""
+    index, cfg, _queries = served_index
+    with pytest.raises(ValueError):
+        AnnServingEngine(index, cfg, shards=4)
+    with pytest.raises(ValueError):
+        AnnServingEngine(index, cfg, backend="bogus")
 
 
 def test_jit_cache_is_bounded(served_index):

@@ -6,6 +6,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.selection import (
     _alg5_threshold_reference,
+    compact_above_threshold,
+    fixed_budget,
     fixed_threshold,
     query_aware_threshold,
     sc_histogram,
@@ -80,3 +82,45 @@ def test_cap_truncation_marks_validity():
     sc = jnp.asarray(np.full((1, 100), 5, np.int32))
     ids, valid, thresh, count = select_candidates(sc, 1000.0, 6, cap=10, mode="query_aware")
     assert int(valid.sum()) == 10  # capacity-bounded
+    assert int(count[0]) == 100  # pre-clamp demand, not min(count, cap)
+
+
+def test_count_is_pre_clamp_and_exact_cap_is_not_truncation():
+    """count == cap must mean "exact fit, nothing dropped": the returned
+    count is the demand, so `count > cap` is the only truncation signal."""
+    sc_np = np.zeros((1, 1000), np.int32)
+    sc_np[0, :20] = 6  # level 6 fits the beta_n=50 budget
+    sc_np[0, 20:120] = 2  # level 2 overflows and is included -> demand 120
+    sc = jnp.asarray(sc_np)
+    ids, valid, thresh, count = select_candidates(sc, 50.0, 6, cap=120, mode="query_aware")
+    assert int(count[0]) == 120 and int(valid.sum()) == 120
+    assert not bool((count > 120)[0])  # exact fit: NOT truncated
+    # same demand against a smaller cap: now it IS truncation
+    ids, valid, thresh, count = select_candidates(sc, 50.0, 6, cap=119, mode="query_aware")
+    assert int(count[0]) == 120 and int(valid.sum()) == 119
+    assert bool((count > 119)[0])
+
+
+def test_compact_above_threshold_matches_mask():
+    rng = np.random.default_rng(2)
+    sc_np = rng.integers(0, 5, size=(3, 200), dtype=np.int32)
+    thresh = jnp.asarray([2, 3, 4], jnp.int32)
+    ids, valid, count = compact_above_threshold(jnp.asarray(sc_np), thresh, cap=150)
+    ids, valid = np.asarray(ids), np.asarray(valid)
+    for q in range(3):
+        expected = np.flatnonzero(sc_np[q] >= int(thresh[q]))
+        assert int(count[q]) == expected.size
+        np.testing.assert_array_equal(np.sort(ids[q][valid[q]]), expected)
+
+
+def test_fixed_budget_is_ceil():
+    """Paper protocol: ceil(beta*n), not round() (which under-budgets
+    fractions below .5)."""
+    assert fixed_budget(10.4, 2000) == 11
+    assert fixed_budget(10.0, 2000) == 10
+    assert fixed_budget(0.3, 2000) == 1  # floor at 1
+    assert fixed_budget(99.1, 50) == 50  # clamped to n
+    sc = jnp.asarray(np.random.default_rng(3).integers(0, 7, (2, 2000), np.int32))
+    _ids, valid, _t, count = select_candidates(sc, 10.4, 6, cap=400, mode="fixed")
+    np.testing.assert_array_equal(np.asarray(valid.sum(1)), [11, 11])
+    np.testing.assert_array_equal(np.asarray(count), [11, 11])

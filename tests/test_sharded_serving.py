@@ -1,0 +1,140 @@
+"""Sharded-index serving correctness — single-vs-multi-shard parity and the
+global candidate-budget invariant, through both the raw distributed query
+and the AnnServingEngine sharded backend. Runs in a subprocess with 8
+forced host devices (the XLA device count must be set before jax init)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.data import gmm_dataset, make_queries
+from repro.core import build, query, query_with_stats, taco_config
+from repro.core.distributed import (
+    index_pspecs, make_distributed_query, make_distributed_query_with_stats,
+)
+from repro.serving import AnnRequest, AnnServingEngine, ShardedAnnBackend
+
+assert len(jax.devices()) == 8, jax.devices()
+data0 = gmm_dataset(8192, 64, seed=0)
+data, queries = make_queries(data0, 16)
+n = data.shape[0]
+cfg = taco_config(n_subspaces=4, subspace_dim=8, n_clusters=256,
+                  alpha=0.05, beta=0.02, k=10)
+idx = build(data, cfg)
+ids_ref, d_ref, stats_ref = query_with_stats(idx, queries, cfg)
+demand_ref = np.asarray(stats_ref["candidate_demand"])
+assert not np.any(np.asarray(stats_ref["truncated"]))
+
+def shard(mesh, data_axes, q_axes):
+    specs = index_pspecs(idx, data_axes)
+    si = jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)) if s is not None else x,
+        idx, specs, is_leaf=lambda x: x is None)
+    q = jax.device_put(jnp.asarray(queries), NamedSharding(mesh, P(*q_axes)))
+    return si, q
+
+# --- exact parity + global budget, at two different shard counts ---------
+for mesh_shape, axes, da, qa in [
+    ((4, 2), ("data", "model"), ("data",), ("model", None)),
+    ((8, 1), ("data", "model"), ("data",), ("model", None)),
+]:
+    mesh = jax.make_mesh(mesh_shape, axes)
+    si, q = shard(mesh, da, qa)
+    S = mesh_shape[0]
+    qfn = make_distributed_query_with_stats(mesh, cfg, idx, n_global=n, data_axes=da)
+    ids_d, d_d, st = qfn(si, q)
+    # bitwise parity with the single-device query (budget is GLOBAL now)
+    np.testing.assert_array_equal(np.asarray(ids_d), np.asarray(ids_ref))
+    np.testing.assert_array_equal(np.asarray(d_d), np.asarray(d_ref))
+    sc = np.asarray(st["shard_candidates"])
+    assert sc.shape == (16, S)
+    assert not np.asarray(st["shard_truncated"]).any()
+    # total re-ranked candidates == single-device demand, NOT S * beta * n
+    np.testing.assert_array_equal(sc.sum(axis=1), demand_ref)
+    assert sc.sum(axis=1).max() <= cfg.cap_for(n), (sc.sum(axis=1).max(), cfg.cap_for(n))
+
+# stats-free wrapper agrees too
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+si, q = shard(mesh, ("data",), ("model", None))
+ids_w, d_w = make_distributed_query(mesh, cfg, idx, n_global=n)(si, q)
+np.testing.assert_array_equal(np.asarray(ids_w), np.asarray(ids_ref))
+
+# --- runtime-k variant mirrors query_with_stats(k=...) -------------------
+qfn5 = make_distributed_query_with_stats(mesh, cfg, idx, n_global=n, k=5)
+ids5, d5, _ = qfn5(si, q)
+ids5_ref, d5_ref = query(idx, queries, cfg, k=5)
+assert np.asarray(ids5).shape == (16, 5)
+np.testing.assert_array_equal(np.asarray(ids5), np.asarray(ids5_ref))
+np.testing.assert_array_equal(np.asarray(d5), np.asarray(d5_ref))
+
+# --- engine front-end: sharded backend == single backend -----------------
+reqs = [AnnRequest(query=qv) for qv in queries]
+reqs[3] = AnnRequest(query=queries[3], k=5)      # per-request k override
+reqs[7] = AnnRequest(query=queries[7], beta=0.01)  # per-request beta override
+single = AnnServingEngine(idx, cfg, max_batch=8)
+sharded = AnnServingEngine(idx, cfg, max_batch=8, backend="sharded", shards=8)
+r_s, r_h = single.search(reqs), sharded.search(reqs)
+assert not any(r.truncated for r in r_s)  # exactness regime
+for a, b in zip(r_s, r_h):
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.dists, b.dists)
+
+# engine telemetry carries the per-shard stats + combine size
+t = sharded.telemetry()
+assert t["backend"] == "ShardedAnnBackend" and t["shards"] == 8
+assert len(t["shard_candidates_mean"]) == 8
+assert max(t["shard_truncation_rate"]) == 0.0
+# combine size: shards * k id/dist pairs per query (k=10 default, 5 and 10
+# overrides in the mix -> mean below 80)
+assert 0 < t["combine_pairs_per_query"] <= 8 * 10
+# jit cache: three (bucket, k, cfg) groups, steady-state reuse
+sharded.search([AnnRequest(query=qv) for qv in queries[:8]])
+assert sharded.telemetry()["compiles_total"] == t["compiles_total"]
+# per-request AnnResult carries its shard split; single-device does not
+assert r_h[0].shard_candidates is not None and len(r_h[0].shard_candidates) == 8
+assert int(r_h[0].shard_candidates.sum()) == int(demand_ref[0])
+assert r_s[0].shard_candidates is None
+
+# large-k override: per-shard cap floors at the runtime k (regression:
+# caps sized only from 4*cfg.k crashed rerank's top_k for k > cap)
+big = sharded.search([AnnRequest(query=queries[0], k=150)])[0]
+big_ref = single.search([AnnRequest(query=queries[0], k=150)])[0]
+np.testing.assert_array_equal(big.ids, big_ref.ids)
+# ... while k beyond the shard size is a clear build-time error
+try:
+    sharded.search([AnnRequest(query=queries[0], k=2000)])
+    raise SystemExit("expected ValueError for k > shard size")
+except ValueError as e:
+    assert "shard" in str(e)
+
+# explicit-mesh backend constructor path
+be = ShardedAnnBackend(idx, mesh=jax.make_mesh((4, 2), ("data", "model")),
+                       data_axes=("data",))
+eng2 = AnnServingEngine(idx, cfg, max_batch=8, backend=be)
+r2 = eng2.search([AnnRequest(query=qv) for qv in queries[:3]])
+for a, b in zip(r_s[:3], r2):  # requests 0-2 are default-parameter
+    np.testing.assert_array_equal(a.ids, b.ids)
+print("SHARDED_SERVING_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_serving_parity_and_budget():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "") + os.pathsep + "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "SHARDED_SERVING_OK" in proc.stdout
