@@ -10,22 +10,104 @@ Two baselines bracket the status quo:
     micro-batching win from the compile-amortization win.
 
 The engine micro-batches the same request stream into padded shape
-buckets with a jit cache keyed on (bucket, k, cfg). ``--shards N`` also
-times the corpus-sharded backend (``backend="sharded"``) on an N-way data
-mesh, reported alongside the single-device numbers; on a CPU dev box the
-devices are forced via ``XLA_FLAGS=--xla_force_host_platform_device_count``
-(set before jax initializes — hence the deferred imports).
+buckets with a jit cache keyed on (bucket, k, cfg), and is timed twice:
+with the gather re-rank (``rerank="gather"``) and with the streaming
+masked-full pipeline (``rerank="masked_full"`` — no candidate cap, no
+(Q, n) intermediates; see kernels/schist.py + kernels/masked_rerank.py).
+Per-stage timings for both pipelines are reported alongside. ``--shards
+N`` also times the corpus-sharded backend (``backend="sharded"``) on an
+N-way data mesh; on a CPU dev box the devices are forced via
+``XLA_FLAGS=--xla_force_host_platform_device_count`` (set before jax
+initializes — hence the deferred imports). ``--json PATH`` persists the
+numbers (QPS, p50/p99, stage timings) for trend tracking — the committed
+baseline lives at BENCH_serving.json in the repo root.
 
   PYTHONPATH=src python benchmarks/bench_serving.py [--n 20000] [--d 64] \
-      [--requests 32] [--pressure 16] [--shards 4]
+      [--requests 32] [--pressure 16] [--shards 4] [--json BENCH_serving.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
-def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0):
+def stage_timings(index, cfg, queries):
+    """Median per-stage wall times (us) of both re-rank pipelines on one
+    warm batch: SC+selection vs histogram+threshold, then re-rank."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.selection import query_aware_threshold, select_candidates
+    from repro.core.taco import (
+        _collision_inputs,
+        compute_sc_scores,
+        data_norms_of,
+        rerank,
+    )
+    from repro.kernels import ops
+
+    def time_call(fn, *args, warmup=1, iters=3):
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts) * 1e6)
+
+    queries = jnp.asarray(queries)
+    beta_n = float(cfg.beta * index.n)
+    cap = min(index.n, max(cfg.cap_for(index.n), cfg.k))
+
+    # --- gather pipeline stages -------------------------------------------
+    sc_fn = jax.jit(lambda q: compute_sc_scores(index, q, cfg)[0])
+    sc = jax.block_until_ready(sc_fn(queries))
+    sel_fn = jax.jit(
+        lambda s: select_candidates(s, beta_n, cfg.n_subspaces, cap,
+                                    mode=cfg.selection)
+    )
+    cand_ids, valid, _t, _c = jax.block_until_ready(sel_fn(sc))
+    grr_fn = jax.jit(
+        lambda q, ci, va: rerank(index.data, q, ci, va, cfg.k,
+                                 data_norms_of(index))
+    )
+    # --- masked-full pipeline stages --------------------------------------
+    ci_fn = jax.jit(lambda q: _collision_inputs(index, q, cfg)[:5])
+    d1s, d2s, a1s, a2s, taus = jax.block_until_ready(ci_fn(queries))
+    hist_fn = jax.jit(lambda *a: ops.schist(*a, impl="jnp"))
+    hist = jax.block_until_ready(hist_fn(d1s, d2s, a1s, a2s, taus))
+    th_fn = jax.jit(
+        lambda h: query_aware_threshold(h, beta_n, cfg.n_subspaces)[0]
+    )
+    thresh = jax.block_until_ready(th_fn(hist))
+    mrr_fn = jax.jit(
+        lambda *a: ops.masked_rerank(*a, index.data, data_norms_of(index),
+                                     queries, cfg.k, impl="jnp")
+    )
+    return {
+        "gather": {
+            "sc_scores_us": time_call(sc_fn, queries),
+            "select_candidates_us": time_call(sel_fn, sc),
+            "gather_rerank_us": time_call(grr_fn, queries, cand_ids, valid),
+        },
+        "masked_full": {
+            "collision_inputs_us": time_call(ci_fn, queries),
+            "schist_us": time_call(hist_fn, d1s, d2s, a1s, a2s, taus),
+            "threshold_us": time_call(th_fn, hist),
+            "masked_rerank_us": time_call(
+                mrr_fn, d1s, d2s, a1s, a2s, taus, thresh
+            ),
+        },
+    }
+
+
+def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
+          json_path=None):
+    import dataclasses
+
     import jax
     import numpy as np
 
@@ -59,8 +141,8 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0):
     cached_s = time.perf_counter() - t0
 
     # --- batched engine: waves of `pressure` concurrent requests ----------
-    def run_engine(backend, **bk):
-        engine = AnnServingEngine(index, cfg, max_batch=max(pressure, 1),
+    def run_engine(backend, run_cfg, **bk):
+        engine = AnnServingEngine(index, run_cfg, max_batch=max(pressure, 1),
                                   backend=backend, **bk)
         engine.search([AnnRequest(query=q) for q in qs[:pressure]])  # warm
         engine.reset_telemetry()
@@ -69,22 +151,36 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0):
             engine.search([AnnRequest(query=q) for q in qs[lo : lo + pressure]])
         return engine, time.perf_counter() - t0
 
-    engine, engine_s = run_engine("single")
-    rows = [("adhoc-jit", adhoc_s), ("cached-jit", cached_s), ("engine", engine_s)]
+    cfg_masked = dataclasses.replace(cfg, rerank="masked_full")
+    engine, engine_s = run_engine("single", cfg)
+    masked_engine, masked_s = run_engine("single", cfg_masked)
+    rows = [
+        ("adhoc-jit", adhoc_s),
+        ("cached-jit", cached_s),
+        ("engine-gather", engine_s),
+        ("engine-masked", masked_s),
+    ]
 
     sharded_t = None
     if shards > 1:
-        sharded_engine, sharded_s = run_engine("sharded", shards=shards)
+        sharded_engine, sharded_s = run_engine("sharded", cfg, shards=shards)
         rows.append((f"engine-{shards}shard", sharded_s))
         sharded_t = sharded_engine.telemetry()
 
+    stages = stage_timings(index, cfg, qs[:pressure])
     t = engine.telemetry()
+    mt = masked_engine.telemetry()
     print(f"requests={requests} pressure={pressure}")
     for name, secs in rows:
         print(f"  {name:14s}: {secs:7.3f}s  {requests / secs:8.0f} queries/s")
-    print(f"  engine p50 {t['latency_p50_s'] * 1e3:.2f} ms  p99 "
+    print(f"  gather p50 {t['latency_p50_s'] * 1e3:.2f} ms  p99 "
           f"{t['latency_p99_s'] * 1e3:.2f} ms  trunc {t['truncation_rate']:.3f}  "
           f"compiles {t['compiles_per_bucket']}")
+    print(f"  masked p50 {mt['latency_p50_s'] * 1e3:.2f} ms  p99 "
+          f"{mt['latency_p99_s'] * 1e3:.2f} ms  trunc {mt['truncation_rate']:.3f}")
+    for mode, st in stages.items():
+        pretty = "  ".join(f"{k2} {v:.0f}" for k2, v in st.items())
+        print(f"  stages[{mode}]: {pretty}")
     if sharded_t is not None:
         print(f"  sharded p50 {sharded_t['latency_p50_s'] * 1e3:.2f} ms  "
               f"combine {sharded_t['combine_pairs_per_query']:.0f} pairs/query  "
@@ -92,6 +188,35 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0):
               f"{[round(c) for c in sharded_t['shard_candidates_mean']]}")
     print(f"  speedup vs adhoc : {adhoc_s / engine_s:7.2f}x")
     print(f"  speedup vs cached: {cached_s / engine_s:7.2f}x")
+    print(f"  masked vs gather : {engine_s / masked_s:7.2f}x")
+
+    if json_path:
+        payload = {
+            "config": {"n": int(data.shape[0]), "d": d, "k": k,
+                       "requests": requests, "pressure": pressure,
+                       "shards": shards, "backend": jax.default_backend()},
+            "rows": [
+                {"name": name, "seconds": secs, "qps": requests / secs}
+                for name, secs in rows
+            ],
+            "gather": {"latency_p50_s": t["latency_p50_s"],
+                       "latency_p99_s": t["latency_p99_s"],
+                       "truncation_rate": t["truncation_rate"]},
+            "masked_full": {"latency_p50_s": mt["latency_p50_s"],
+                            "latency_p99_s": mt["latency_p99_s"],
+                            "truncation_rate": mt["truncation_rate"]},
+            "stage_timings_us": stages,
+            "masked_vs_gather_qps": engine_s / masked_s,
+        }
+        if sharded_t is not None:
+            payload["sharded"] = {
+                "latency_p50_s": sharded_t["latency_p50_s"],
+                "combine_pairs_per_query": sharded_t["combine_pairs_per_query"],
+                "shard_candidates_mean": sharded_t["shard_candidates_mean"],
+            }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, default=float)
+        print(f"wrote {json_path}")
     return adhoc_s / engine_s
 
 
@@ -105,6 +230,9 @@ def main(argv=None):
     ap.add_argument("--shards", type=int, default=0,
                     help="also bench the sharded backend on this many devices")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", nargs="?", const="BENCH_serving.json",
+                    default=None, metavar="PATH",
+                    help="write results as JSON (default path when bare)")
     args = ap.parse_args(argv)
     if args.pressure < 1:
         ap.error("--pressure must be >= 1")
@@ -114,7 +242,8 @@ def main(argv=None):
 
         force_host_devices(args.shards)
     bench(n=args.n, d=args.d, k=args.k, requests=args.requests,
-          pressure=args.pressure, shards=args.shards, seed=args.seed)
+          pressure=args.pressure, shards=args.shards, seed=args.seed,
+          json_path=args.json)
 
 
 if __name__ == "__main__":

@@ -32,6 +32,23 @@ def run():
     rows.append(("kernels/scscore_6x100x100k",
                  round(time_call(jax.jit(ref.scscore_ref), d1, d2, a1, a2, taus), 1),
                  "jnp_oracle"))
+
+    # streaming masked-full pipeline hot loops (same shapes as scscore row)
+    from repro.kernels import ops
+
+    d = 64
+    dat = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    qs = jnp.asarray(rng.standard_normal((nq, d)), jnp.float32)
+    nrm = jnp.sum(dat * dat, axis=1)
+    th = jnp.full((nq,), 4, jnp.int32)
+    rows.append(("kernels/schist_6x100x100k",
+                 round(time_call(lambda *a: ops.schist(*a, impl="jnp"),
+                                 d1, d2, a1, a2, taus), 1), "jnp_stream"))
+    rows.append(("kernels/masked_rerank_6x100x100k_d64_k10",
+                 round(time_call(
+                     lambda *a: ops.masked_rerank(*a, impl="jnp"),
+                     d1, d2, a1, a2, taus, th, dat, nrm, qs, 10), 1),
+                 "jnp_stream"))
     return emit(rows)
 
 

@@ -1,8 +1,12 @@
 """Benchmark harness entry point — one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV per row (see each module)."""
+Prints ``name,us_per_call,derived`` CSV per row (see each module).
+``--json [PATH]`` additionally persists every module's rows + wall time
+(default path BENCH_query.json at the repo root — the committed baseline
+future PRs diff against)."""
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -11,6 +15,9 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma-separated module names")
+    ap.add_argument("--json", nargs="?", const="BENCH_query.json",
+                    default=None, metavar="PATH",
+                    help="write all rows as JSON (default path when bare)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -40,16 +47,33 @@ def main() -> None:
     }
     chosen = args.only.split(",") if args.only else list(modules)
     failures = 0
+    report: dict = {}
     for name in chosen:
         mod = modules[name.strip()]
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
         try:
-            mod.run()
+            rows = mod.run()
         except Exception:
             traceback.print_exc()
             failures += 1
+            report[name.strip()] = {"error": traceback.format_exc(limit=1)}
+        else:
+            report[name.strip()] = {
+                "seconds": round(time.time() - t0, 2),
+                # most modules emit (name, us_per_call, derived) tuples;
+                # roofline returns dict rows — keep those as-is
+                "rows": [
+                    r if isinstance(r, dict)
+                    else {"name": r[0], "us_per_call": r[1], "derived": r[2]}
+                    for r in rows or []
+                ],
+            }
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"modules": report}, f, indent=2, default=str)
+        print(f"# wrote {args.json}", flush=True)
     sys.exit(1 if failures else 0)
 
 

@@ -35,6 +35,18 @@ class SCConfig:
     candidate_cap: int | None = None  # None → auto from beta & k
     seed: int = 0
     use_kernels: bool = False  # route hot loops through Pallas kernels
+    #: candidate re-rank strategy:
+    #:   'gather'      — Alg. 5 compaction into `cap` static slots + a
+    #:                   (Q, cap, d) gather (may truncate beyond cap);
+    #:   'masked_full' — two-pass streaming pipeline: blockwise SC-score +
+    #:                   histogram (pass 1), then a masked full-matmul
+    #:                   re-rank with a running per-query top-k (pass 2).
+    #:                   No candidate cap, so `truncated` is structurally
+    #:                   impossible; no (Q, n) or (Q, cap, d) intermediate.
+    #:   'auto'        — masked_full for single-device queries, gather for
+    #:                   corpus-sharded local queries (billion-scale shards
+    #:                   keep the gather path, see ROADMAP).
+    rerank: str = "gather"
 
     @property
     def sqrt_k(self) -> int:
@@ -49,6 +61,22 @@ class SCConfig:
         # Alg. 5 can include up to one over-budget level; 4x beta*n + headroom
         # keeps truncation (which tests assert against) out of normal operation.
         return int(min(n, max(4 * self.k, math.ceil(4 * self.beta * n))))
+
+
+def resolve_rerank(cfg: SCConfig, *, distributed: bool = False) -> str:
+    """Resolve ``cfg.rerank`` to a concrete strategy for one call site.
+
+    ``auto`` picks the streaming masked-full pipeline for single-device
+    queries and keeps the gather path for corpus-sharded local queries
+    (billion-scale shards re-rank ~beta*n_local points, where the full
+    n_local-column matmul would dominate).
+    """
+    mode = cfg.rerank
+    if mode == "auto":
+        return "gather" if distributed else "masked_full"
+    if mode not in ("gather", "masked_full"):
+        raise ValueError(f"unknown rerank mode {mode!r}")
+    return mode
 
 
 def taco_config(**kw) -> SCConfig:

@@ -41,16 +41,17 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import axis_size, shard_map
 
 from repro.core.activation import activation_taus
-from repro.core.config import SCConfig
+from repro.core.config import SCConfig, resolve_rerank
 from repro.core.imi import split_halves
 from repro.core.scoring import sc_scores
 from repro.core.selection import (
     compact_above_threshold,
+    fixed_threshold_from_hist,
     query_aware_threshold,
     sc_histogram,
     select_candidates,
 )
-from repro.core.taco import SCIndex, _sub_slices, rerank
+from repro.core.taco import SCIndex, _sub_slices, data_norms_of, rerank
 from repro.utils import pairwise_sq_dists, topk_smallest
 
 
@@ -83,6 +84,7 @@ def index_pspecs(index: SCIndex, data_axes) -> SCIndex:
         subspaces=tuple(sub_spec(s) for s in index.subspaces),
         data=P(da, None),
         sub_dims=index.sub_dims,
+        data_norms=None if index.data_norms is None else P(da),
     )
 
 
@@ -117,7 +119,11 @@ def make_distributed_query_with_stats(
       * ``shard_truncated``  — per-shard demand exceeded the shard's static
         cap (``max(4*beta*n_local, k)``, or ``candidate_cap`` per shard);
         any truncation voids the sharded == single-device exactness
-        guarantee.
+        guarantee. With ``cfg.rerank == "masked_full"`` each shard runs the
+        streaming masked re-rank over ALL its above-threshold points
+        (kernels/masked_rerank.py) — no per-shard cap exists and this stat
+        is always False. Note ``resolve_rerank``: ``"auto"`` keeps the
+        gather path for sharded local queries.
 
     Billion-scale configuration: shard the corpus over ALL mesh axes
     (``data_axes=("data", "model")``, 256/512-way — 1B x 128d = 2 GB/device)
@@ -137,6 +143,8 @@ def make_distributed_query_with_stats(
             f"shard must hold at least k points to emit its local top-k"
         )
 
+    rerank_mode = resolve_rerank(cfg, distributed=True)
+
     def local_query(idx: SCIndex, queries: jax.Array):
         n_local = idx.data.shape[0]
         pq = _project_local(idx, queries)
@@ -149,37 +157,78 @@ def make_distributed_query_with_stats(
             d1s.append(d1)
             d2s.append(d2)
             taus.append(tau)
+        d1s, d2s, taus = jnp.stack(d1s), jnp.stack(d2s), jnp.stack(taus)
         a1s = jnp.stack([s.assign1 for s in idx.subspaces])
         a2s = jnp.stack([s.assign2 for s in idx.subspaces])
-        sc = sc_scores(jnp.stack(d1s), jnp.stack(d2s), a1s, a2s, jnp.stack(taus))
-        # Per-shard static cap sized from the shard's SHARE of the global
-        # budget (4*beta*n_local, the same 4x headroom as cap_for), floored
-        # only at the runtime k each shard needs to emit its local top-k —
-        # NOT at cap_for's 4*cfg.k, which would scale total static re-rank
-        # work as S*4k in the many-shard regime. An explicit candidate_cap
-        # is a per-shard cap (as in the billion-scale dry-run config).
-        base = (
-            cfg.candidate_cap
-            if cfg.candidate_cap is not None
-            else math.ceil(4 * cfg.beta * n_local)
-        )
-        cap = min(n_local, max(base, k))
-        if cfg.selection == "query_aware":
-            # The budget is GLOBAL: psum the local SC-score histograms so
-            # every shard walks Algorithm 5 on the global histogram against
-            # the global beta*n budget and cuts at the same threshold.
-            # Total selected across shards == the single-device count —
-            # NOT S * beta * n as the old per-shard-budget code did.
-            hist = jax.lax.psum(sc_histogram(sc, cfg.n_subspaces), data_axes)
-            thresh, _ = query_aware_threshold(hist, beta_n, cfg.n_subspaces)
-            cand_ids, valid, count = compact_above_threshold(sc, thresh, cap)
-        else:
-            # fixed selection ranks by LOCAL score order, so the global
-            # rank cut is approximated by an even split of the budget.
-            cand_ids, valid, _t, count = select_candidates(
-                sc, beta_n / n_shards, cfg.n_subspaces, cap, mode=cfg.selection
+
+        if rerank_mode == "masked_full":
+            # Streaming masked-full per shard: local SC histograms are
+            # psummed (same global-threshold discipline as the gather
+            # branch), then every shard re-ranks ALL its above-threshold
+            # points with the blockwise masked matmul — no per-shard cap,
+            # so per-shard truncation is structurally impossible. For
+            # fixed selection this IS the global rank cut the gather
+            # branch only approximates by an even budget split (ties at
+            # the threshold level are all re-ranked).
+            from repro.kernels.masked_rerank import (
+                finalize_topk,
+                masked_rerank_stream,
             )
-        ids_local, dists_local = rerank(idx.data, queries, cand_ids, valid, k)
+            from repro.kernels.schist import schist_stream
+
+            local_hist = schist_stream(
+                d1s, d2s, a1s, a2s, taus, n_levels=cfg.n_subspaces + 1
+            )
+            hist = jax.lax.psum(local_hist, data_axes)
+            if cfg.selection == "query_aware":
+                thresh, _ = query_aware_threshold(hist, beta_n, cfg.n_subspaces)
+            elif cfg.selection == "fixed":
+                thresh, _ = fixed_threshold_from_hist(hist, beta_n, n_global)
+            else:
+                raise ValueError(f"unknown selection mode {cfg.selection!r}")
+            levels = jnp.arange(cfg.n_subspaces + 1)[None, :]
+            count = jnp.sum(
+                jnp.where(levels >= thresh[:, None], local_hist, 0), axis=1
+            ).astype(jnp.int32)
+            bd, bi = masked_rerank_stream(
+                d1s, d2s, a1s, a2s, taus, thresh, queries,
+                idx.data, data_norms_of(idx), k=k,
+            )
+            ids_local, dists_local = finalize_topk(bd, bi, idx.data, queries, k)
+            truncated = jnp.zeros_like(count, dtype=bool)
+        else:
+            sc = sc_scores(d1s, d2s, a1s, a2s, taus)
+            # Per-shard static cap sized from the shard's SHARE of the global
+            # budget (4*beta*n_local, the same 4x headroom as cap_for), floored
+            # only at the runtime k each shard needs to emit its local top-k —
+            # NOT at cap_for's 4*cfg.k, which would scale total static re-rank
+            # work as S*4k in the many-shard regime. An explicit candidate_cap
+            # is a per-shard cap (as in the billion-scale dry-run config).
+            base = (
+                cfg.candidate_cap
+                if cfg.candidate_cap is not None
+                else math.ceil(4 * cfg.beta * n_local)
+            )
+            cap = min(n_local, max(base, k))
+            if cfg.selection == "query_aware":
+                # The budget is GLOBAL: psum the local SC-score histograms so
+                # every shard walks Algorithm 5 on the global histogram against
+                # the global beta*n budget and cuts at the same threshold.
+                # Total selected across shards == the single-device count —
+                # NOT S * beta * n as the old per-shard-budget code did.
+                hist = jax.lax.psum(sc_histogram(sc, cfg.n_subspaces), data_axes)
+                thresh, _ = query_aware_threshold(hist, beta_n, cfg.n_subspaces)
+                cand_ids, valid, count = compact_above_threshold(sc, thresh, cap)
+            else:
+                # fixed selection ranks by LOCAL score order, so the global
+                # rank cut is approximated by an even split of the budget.
+                cand_ids, valid, _t, count = select_candidates(
+                    sc, beta_n / n_shards, cfg.n_subspaces, cap, mode=cfg.selection
+                )
+            ids_local, dists_local = rerank(
+                idx.data, queries, cand_ids, valid, k, data_norms_of(idx)
+            )
+            truncated = count > cap
 
         # globalize ids and combine across data shards
         shard_off = jnp.int32(0)
@@ -194,7 +243,7 @@ def make_distributed_query_with_stats(
                 count[:, None], data_axes, axis=1, tiled=True
             ),
             "shard_truncated": jax.lax.all_gather(
-                (count > cap)[:, None], data_axes, axis=1, tiled=True
+                truncated[:, None], data_axes, axis=1, tiled=True
             ),
         }
         return jnp.take_along_axis(all_ids, pos, axis=1), top_d, stats

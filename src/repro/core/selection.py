@@ -83,6 +83,29 @@ def fixed_budget(beta_n: float, n: int) -> int:
     return int(min(max(1, math.ceil(beta_n)), n))
 
 
+def fixed_threshold_from_hist(hist: jax.Array, beta_n: float, n: int):
+    """SuCo fixed-budget threshold computed from the SC-score histogram.
+
+    The threshold equals :func:`fixed_threshold`'s (the SC value of the
+    ceil(beta_n)-th best point == the largest level L with
+    count(SC >= L) >= budget), but it needs only the (Q, N_s+1) histogram —
+    no (Q, n) SC matrix and no top_k — so SuCo mode rides the streaming
+    masked-full pipeline. Returns (thresh (Q,) int32, demand (Q,) int32)
+    where ``demand`` counts ALL points at or above the threshold: unlike the
+    rank-cut gather path, the masked pipeline cannot cut ties at the
+    threshold level by rank, so it re-ranks every tie (demand >= budget —
+    recall can only improve).
+    """
+    budget = fixed_budget(beta_n, n)
+    # rev[:, j] = # points with SC >= j
+    rev = jnp.cumsum(hist[:, ::-1], axis=1)[:, ::-1]
+    # rev is non-increasing in j: the largest feasible level is the count of
+    # feasible levels j >= 1 (threshold 0 when even level 1 lacks budget).
+    thresh = jnp.sum(rev[:, 1:] >= budget, axis=1).astype(jnp.int32)
+    demand = jnp.take_along_axis(rev, thresh[:, None], axis=1)[:, 0]
+    return thresh, demand.astype(jnp.int32)
+
+
 def fixed_threshold(sc: jax.Array, beta_n: float, n_subspaces: int):
     """SuCo baseline: a fixed beta*n candidate budget for every query.
     The threshold is the SC-score of the ceil(beta_n)-th best point."""

@@ -15,10 +15,14 @@ import numpy as np
 
 from repro.core import transform as T
 from repro.core.activation import activation_taus
-from repro.core.config import SCConfig
+from repro.core.config import SCConfig, resolve_rerank
 from repro.core.imi import IMISubspace, build_imi_subspace, split_halves
 from repro.core.scoring import sc_scores
-from repro.core.selection import select_candidates
+from repro.core.selection import (
+    fixed_threshold_from_hist,
+    query_aware_threshold,
+    select_candidates,
+)
 from repro.utils import (
     pairwise_sq_dists,
     register_pytree_dataclass,
@@ -38,6 +42,11 @@ class SCIndex:
     subspaces: tuple[IMISubspace, ...]
     data: jax.Array  # (n, d) original data, used for re-ranking
     sub_dims: tuple[int, ...] = static_field(default=())
+    #: (n,) float32 ``||x||^2`` per point, precomputed at build() time so
+    #: re-ranking can use the MXU-shaped ``||q||^2 - 2 q.x + ||x||^2`` form
+    #: without a per-query norm pass (None on indexes built before this
+    #: field existed — re-rank falls back to the diff-square form).
+    data_norms: jax.Array | None = None
 
     @property
     def n(self) -> int:
@@ -52,6 +61,8 @@ class SCIndex:
             size += tree_size_bytes(self.transform)
         if self.dim_perm is not None:
             size += int(self.dim_perm.size * self.dim_perm.dtype.itemsize)
+        if self.data_norms is not None:
+            size += int(self.data_norms.size * self.data_norms.dtype.itemsize)
         return size
 
 
@@ -115,6 +126,7 @@ def build(data: jax.Array, cfg: SCConfig) -> SCIndex:
         subspaces=tuple(subspaces),
         data=data,
         sub_dims=sub_dims,
+        data_norms=jnp.sum(data * data, axis=1),
     )
 
 
@@ -134,8 +146,10 @@ def _centroid_distances(index: SCIndex, queries: jax.Array, use_kernels: bool):
     return jnp.stack(d1s), jnp.stack(d2s)
 
 
-def compute_sc_scores(index: SCIndex, queries: jax.Array, cfg: SCConfig):
-    """Collision counting (Alg. 6 lines 3-7): SC-scores (Q, n) + diagnostics."""
+def _collision_inputs(index: SCIndex, queries: jax.Array, cfg: SCConfig):
+    """Alg. 6 lines 3-5 without the SC matrix: the per-subspace centroid
+    distances, activation thresholds and stacked cell assignments that both
+    the gather and the streaming masked-full pipelines consume."""
     d1s, d2s = _centroid_distances(index, queries, cfg.use_kernels)
     alpha_n = cfg.alpha * index.n
     taus, retrieved = [], []
@@ -148,13 +162,27 @@ def compute_sc_scores(index: SCIndex, queries: jax.Array, cfg: SCConfig):
     taus = jnp.stack(taus)  # (N_s, Q)
     a1s = jnp.stack([s.assign1 for s in index.subspaces])
     a2s = jnp.stack([s.assign2 for s in index.subspaces])
+    return d1s, d2s, a1s, a2s, taus, jnp.stack(retrieved)
+
+
+def compute_sc_scores(index: SCIndex, queries: jax.Array, cfg: SCConfig):
+    """Collision counting (Alg. 6 lines 3-7): SC-scores (Q, n) + diagnostics."""
+    d1s, d2s, a1s, a2s, taus, retrieved = _collision_inputs(index, queries, cfg)
     if cfg.use_kernels:
         from repro.kernels.ops import scscore
 
         sc = scscore(d1s, d2s, a1s, a2s, taus)
     else:
         sc = sc_scores(d1s, d2s, a1s, a2s, taus)
-    return sc, {"taus": taus, "retrieved": jnp.stack(retrieved)}
+    return sc, {"taus": taus, "retrieved": retrieved}
+
+
+def data_norms_of(index: SCIndex) -> jax.Array:
+    """``||x||^2`` per point — precomputed at build() time, derived on the
+    fly for indexes predating the ``data_norms`` field."""
+    if index.data_norms is not None:
+        return index.data_norms
+    return jnp.sum(index.data * index.data, axis=1)
 
 
 def rerank(
@@ -163,11 +191,24 @@ def rerank(
     cand_ids: jax.Array,
     valid: jax.Array,
     k: int,
+    data_norms: jax.Array | None = None,
 ):
-    """Result refinement: exact distances over candidates, masked top-k."""
+    """Result refinement: exact distances over candidates, masked top-k.
+
+    With ``data_norms`` (precomputed ``||x||^2``) the distances use the
+    ``||q||^2 - 2 q.x + ||x||^2`` form — one fused multiply-reduce over the
+    gathered candidates instead of materializing the (Q, cap, d) diff
+    tensor twice (subtract + square)."""
     cand_vecs = jnp.take(data, cand_ids, axis=0)  # (Q, cap, d)
-    diff = cand_vecs - queries[:, None, :]
-    dists = jnp.sum(diff * diff, axis=-1)
+    if data_norms is None:
+        diff = cand_vecs - queries[:, None, :]
+        dists = jnp.sum(diff * diff, axis=-1)
+    else:
+        q_norms = jnp.sum(queries * queries, axis=1)  # (Q,)
+        cross = jnp.einsum("qcd,qd->qc", cand_vecs, queries)
+        dists = jnp.maximum(
+            q_norms[:, None] - 2.0 * cross + jnp.take(data_norms, cand_ids), 0.0
+        )
     dists = jnp.where(valid, dists, jnp.inf)
     top_d, pos = topk_smallest(dists, k)
     top_ids = jnp.take_along_axis(cand_ids, pos, axis=1)
@@ -191,13 +232,15 @@ def query_with_stats(
     recompiling per request; see repro.serving.ann_engine)."""
     k = cfg.k if k is None else int(k)
     queries = jnp.asarray(queries, jnp.float32)
+    if resolve_rerank(cfg) == "masked_full":
+        return _query_masked_full(index, queries, cfg, k)
     sc, stats = compute_sc_scores(index, queries, cfg)
     # floor the cap at the runtime k so large-k overrides stay servable
     cap = min(index.n, max(cfg.cap_for(index.n), k))
     cand_ids, valid, thresh, count = select_candidates(
         sc, float(cfg.beta * index.n), cfg.n_subspaces, cap, mode=cfg.selection
     )
-    ids, dists = rerank(index.data, queries, cand_ids, valid, k)
+    ids, dists = rerank(index.data, queries, cand_ids, valid, k, data_norms_of(index))
     stats = dict(
         stats,
         sc_threshold=thresh,
@@ -206,6 +249,51 @@ def query_with_stats(
         truncated=count > cap,  # strictly: count == cap drops nothing
         sc=sc,
     )
+    return ids, dists, stats
+
+
+def _query_masked_full(index: SCIndex, queries: jax.Array, cfg: SCConfig, k: int):
+    """Streaming two-pass query (Alg. 6 with Alg. 5 in histogram space).
+
+    Pass 1 fuses SC-score computation with per-query histogram accumulation
+    (``kernels.schist``): the (Q, n) SC matrix never materializes — only the
+    (Q, N_s+1) histogram leaves the blockwise loop. The Alg. 5 threshold is
+    read off the histogram (query-aware mode) or its top-down cumsum (fixed
+    mode). Pass 2 (``kernels.masked_rerank``) recomputes SC per block,
+    computes exact squared distances by matmul against the precomputed
+    ``||x||^2`` norms, masks by ``SC >= thresh`` and merges each block into a
+    running per-query top-k — no candidate gather, no static cap, so
+    ``truncated`` is structurally impossible and the results carry the true
+    dynamic-shape Alg. 5 semantics even where the gather path truncates.
+
+    Stats parity with the gather path except ``sc`` (whose absence is the
+    point) and ``candidate_count`` == ``candidate_demand`` (nothing is ever
+    clamped).
+    """
+    from repro.kernels import ops
+
+    impl = "auto" if cfg.use_kernels else "jnp"
+    d1s, d2s, a1s, a2s, taus, retrieved = _collision_inputs(index, queries, cfg)
+    hist = ops.schist(d1s, d2s, a1s, a2s, taus, impl=impl)
+    beta_n = float(cfg.beta * index.n)
+    if cfg.selection == "query_aware":
+        thresh, demand = query_aware_threshold(hist, beta_n, cfg.n_subspaces)
+    elif cfg.selection == "fixed":
+        thresh, demand = fixed_threshold_from_hist(hist, beta_n, index.n)
+    else:
+        raise ValueError(f"unknown selection mode {cfg.selection!r}")
+    ids, dists = ops.masked_rerank(
+        d1s, d2s, a1s, a2s, taus, thresh,
+        index.data, data_norms_of(index), queries, k, impl=impl,
+    )
+    stats = {
+        "taus": taus,
+        "retrieved": retrieved,
+        "sc_threshold": thresh,
+        "candidate_count": demand,
+        "candidate_demand": demand,
+        "truncated": jnp.zeros(queries.shape[0], bool),
+    }
     return ids, dists, stats
 
 

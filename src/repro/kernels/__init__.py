@@ -3,6 +3,16 @@
 Each kernel: <name>.py (pl.pallas_call + BlockSpec VMEM tiling), wrapped by
 ops.py (padding + impl selection), validated against ref.py pure-jnp oracles
 in interpret mode (tests/test_kernels.py shape/dtype sweeps).
+
+Streaming-accumulator kernels (schist.py, masked_rerank.py — the masked-full
+query pipeline) additionally follow the FlashAttention discipline: the
+n-point axis is the innermost grid dimension and the per-query result
+(histogram / running top-k) lives in a revisited output block or VMEM
+scratch carried across it, so the (Q, n) score matrix never reaches HBM.
+Their padding invariants (why padded points can never enter the histogram
+or the top-k) are documented in each module's docstring; both also ship a
+``*_stream`` lax.fori_loop twin that keeps the same no-(Q, n)-intermediate
+guarantee on backends without a Pallas lowering.
 """
 from repro.kernels import ops, ref
 

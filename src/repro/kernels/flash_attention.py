@@ -28,7 +28,8 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  n_k: int, causal: bool, bq: int, bk: int, scale: float):
+                  n_k: int, causal: bool, bq: int, bk: int, scale: float,
+                  t_valid: int):
     kb = pl.program_id(2)
 
     @pl.when(kb == 0)
@@ -42,10 +43,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale  # (bq, bk)
+    kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    if t_valid < n_k * bk:
+        # padded key columns must never win the softmax (a zero-padded key
+        # scores 0, which can beat real negative scores in non-causal mode)
+        s = jnp.where(kpos < t_valid, s, NEG_INF)
     if causal:
         qb = pl.program_id(1)
         qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-        kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         s = jnp.where(kpos <= qpos, s, NEG_INF)
 
     m_prev = m_scr[...]
@@ -71,7 +76,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("causal", "bq", "bk", "interpret")
+    jax.jit, static_argnames=("causal", "bq", "bk", "t_valid", "interpret")
 )
 def flash_attention_pallas(
     q: jax.Array,  # (BH, S, hd)
@@ -81,17 +86,20 @@ def flash_attention_pallas(
     causal: bool = True,
     bq: int = 128,
     bk: int = 128,
+    t_valid: int | None = None,  # real key count; columns beyond are masked
     interpret: bool = False,
 ) -> jax.Array:
     bh, s_len, hd = q.shape
     t_len = k.shape[1]
     assert s_len % bq == 0 and t_len % bk == 0, (q.shape, k.shape)
+    t_valid = t_len if t_valid is None else int(t_valid)
     n_k = t_len // bk
     scale = hd**-0.5
     grid = (bh, s_len // bq, n_k)
     return pl.pallas_call(
         functools.partial(
-            _flash_kernel, n_k=n_k, causal=causal, bq=bq, bk=bk, scale=scale
+            _flash_kernel, n_k=n_k, causal=causal, bq=bq, bk=bk, scale=scale,
+            t_valid=t_valid,
         ),
         grid=grid,
         in_specs=[

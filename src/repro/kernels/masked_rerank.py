@@ -1,0 +1,269 @@
+"""Fused masked full-matmul re-rank Pallas kernel (streaming pass 2 of the
+masked-full query pipeline).
+
+Per (query block, point block) grid step the kernel
+
+  1. recomputes the block's SC-scores in VMEM (one-hot matmul, identical
+     to ``kernels.scscore``/``kernels.schist``),
+  2. computes exact squared distances by matmul —
+     ``||q||^2 - 2 q.X^T + ||x||^2`` with ``||x||^2`` precomputed once at
+     index build time (``SCIndex.data_norms``) — an MXU-shaped contraction
+     instead of the gather path's (Q, cap, d) candidate gather,
+  3. masks distances of points below the per-query SC threshold (and of
+     padding) to +inf, and
+  4. merges the block into a running per-query top-k state carried in VMEM
+     scratch across the point-block grid axis (flash-attention-style
+     streaming merge: k rounds of extract-min vs replace-worst).
+
+No candidate set is ever materialized and there is no static candidate
+cap, so truncation is structurally impossible: every point at or above
+the Alg. 5 threshold competes for the top-k, exactly as the paper's
+dynamic-shape algorithm.
+
+Streaming-accumulator design notes
+----------------------------------
+* Block sizes: ``bq`` queries x ``bn`` points; point blocks are the inner
+  grid axis. Scratch ``(bq, kp)`` best-distance/best-id tiles persist
+  across that axis (kp = k padded to a 128-lane tile); outputs are written
+  once, at the last point block.
+* Padding scheme: padded point columns (global index >= ``n_valid``) are
+  masked to +inf BEFORE the merge, so they can never enter the top-k
+  state; padded query rows produce garbage that the wrapper slices off;
+  padded sqrt_k distance columns are never selected (assignments stay
+  < sqrt_k); the feature dim is zero-padded (exact for dot products).
+  Scratch slots >= k hold +inf and are excluded from the worst-slot
+  search, so the state can never grow beyond k real entries.
+* Tie handling: the merge keeps the incumbent on distance ties, and
+  extract-min takes the lowest lane first, so ties resolve to the lowest
+  point id — the same rule as the gather path's stable top_k over
+  index-ordered candidates. The wrapper canonicalizes the final slot
+  order (distance-major, id-minor) for bitwise-stable results.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.schist import (
+    _block_sc,
+    block_sc_scores,
+    cell_ids,
+    collision_table,
+)
+
+INF = float("inf")  # plain Python float: jnp scalars would be captured
+                    # as pallas_call constants
+
+
+def _merge_topk(bd, bi, dist, ids_base, k: int):
+    """Merge (bq, bn) block distances into the (bq, kp) running state.
+
+    k rounds: extract the block min; if it beats the current worst of the
+    k filled slots, replace that slot. Once the block min fails to beat
+    the worst slot, later rounds are no-ops (the min is non-decreasing).
+    """
+    bq, kp = bd.shape
+    kiota = jax.lax.broadcasted_iota(jnp.int32, (bq, kp), 1)
+    niota = jax.lax.broadcasted_iota(jnp.int32, (bq, dist.shape[1]), 1)
+    for _ in range(k):
+        bmin = jnp.min(dist, axis=1)
+        barg = jnp.argmin(dist, axis=1).astype(jnp.int32)
+        wcand = jnp.where(kiota < k, bd, -INF)  # only the k real slots
+        wmax = jnp.max(wcand, axis=1)
+        warg = jnp.argmax(wcand, axis=1).astype(jnp.int32)
+        take = bmin < wmax
+        sel = (kiota == warg[:, None]) & take[:, None]
+        bd = jnp.where(sel, bmin[:, None], bd)
+        bi = jnp.where(sel, (ids_base + barg)[:, None], bi)
+        dist = jnp.where(niota == barg[:, None], INF, dist)
+    return bd, bi
+
+
+def _masked_rerank_kernel(
+    d1_ref, d2_ref, a1_ref, a2_ref, tau_ref, th_ref, q_ref, x_ref, nrm_ref,
+    od_ref, oi_ref, bd_scr, bi_scr, *, n_sub: int, k: int, n_valid: int,
+    bn: int, n_blocks: int
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        bd_scr[...] = jnp.full_like(bd_scr, INF)
+        bi_scr[...] = jnp.full_like(bi_scr, -1)
+
+    bq = od_ref.shape[0]
+    sc = block_sc_scores(d1_ref, d2_ref, a1_ref, a2_ref, tau_ref,
+                         n_sub=n_sub, bq=bq, bn=bn)
+
+    # --- exact squared distances by matmul --------------------------------
+    q = q_ref[...].astype(jnp.float32)  # (bq, d)
+    x = x_ref[...].astype(jnp.float32)  # (bn, d)
+    qdot = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, bn)
+    qn = jnp.sum(q * q, axis=1)
+    dist = jnp.maximum(qn[:, None] - 2.0 * qdot + nrm_ref[...][None, :], 0.0)
+
+    # --- threshold + padding mask, then streaming top-k merge -------------
+    col = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
+    keep = (sc >= th_ref[...][:, None]) & (col < n_valid)
+    dist = jnp.where(keep, dist, INF)
+    bd, bi = _merge_topk(bd_scr[...], bi_scr[...], dist, j * bn, k)
+    bd_scr[...] = bd
+    bi_scr[...] = bi
+
+    @pl.when(j == n_blocks - 1)
+    def _finish():
+        od_ref[...] = bd_scr[...]
+        oi_ref[...] = bi_scr[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "n_valid", "bq", "bn", "interpret")
+)
+def masked_rerank_pallas(
+    d1s: jax.Array,  # (N_s, Q, sqrt_k) pre-padded
+    d2s: jax.Array,
+    a1s: jax.Array,  # (N_s, n) int32 pre-padded
+    a2s: jax.Array,
+    taus: jax.Array,  # (N_s, Q)
+    thresh: jax.Array,  # (Q,) int32
+    queries: jax.Array,  # (Q, d) pre-padded
+    data: jax.Array,  # (n, d) pre-padded
+    data_norms: jax.Array,  # (n,)
+    *,
+    k: int,
+    n_valid: int,
+    bq: int = 8,
+    bn: int = 512,
+    interpret: bool = False,
+):
+    """Unsorted per-query top-k: ((Q, kp) dists f32, (Q, kp) ids i32);
+    real entries live in the first k slots (id -1 / +inf when fewer than k
+    points pass the threshold)."""
+    n_sub, q, sqrt_k = d1s.shape
+    n, d = data.shape
+    assert q % bq == 0 and n % bn == 0, (d1s.shape, data.shape)
+    kp = -(-k // 128) * 128
+    n_blocks = n // bn
+    grid = (q // bq, n_blocks)
+    return pl.pallas_call(
+        functools.partial(
+            _masked_rerank_kernel, n_sub=n_sub, k=k, n_valid=n_valid, bn=bn,
+            n_blocks=n_blocks,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_sub, bq, sqrt_k), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((n_sub, bq, sqrt_k), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((n_sub, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((n_sub, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((n_sub, bq), lambda i, j: (0, i)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, kp), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, kp), jnp.float32),
+            jax.ShapeDtypeStruct((q, kp), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, kp), jnp.float32),
+            pltpu.VMEM((bq, kp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(d1s, d2s, a1s, a2s, taus, thresh, queries, data, data_norms)
+
+
+# ---------------------------------------------------------------------------
+# Streaming jnp path — same blockwise discipline via lax.fori_loop; the loop
+# carry is the (Q, k) running top-k, so no (Q, n) or (Q, cap, d) intermediate
+# exists on this path either (it is the CPU serving path, not just a test
+# oracle).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def masked_rerank_stream(
+    d1s: jax.Array,
+    d2s: jax.Array,
+    a1s: jax.Array,
+    a2s: jax.Array,
+    taus: jax.Array,
+    thresh: jax.Array,
+    queries: jax.Array,
+    data: jax.Array,
+    data_norms: jax.Array,
+    *,
+    k: int,
+    block: int = 4096,
+):
+    """Running top-k over n-blocks: ((Q, k) dists, (Q, k) ids), unsorted
+    beyond ascending-distance order from the per-block top_k merge."""
+    n_sub, qn_, sqrt_k = d1s.shape
+    n, d = data.shape
+    table = collision_table(d1s, d2s, taus)
+    cells = cell_ids(a1s, a2s, sqrt_k)
+    block = min(block, max(n, 1))
+    pad = (-n) % block
+    cells = jnp.pad(cells, ((0, 0), (0, pad)))
+    data_p = jnp.pad(data.astype(jnp.float32), ((0, pad), (0, 0)))
+    norms_p = jnp.pad(data_norms.astype(jnp.float32), (0, pad))
+    n_blocks = cells.shape[1] // block
+    queries = queries.astype(jnp.float32)
+    q_norms = jnp.sum(queries * queries, axis=1)
+
+    def body(b, carry):
+        best_d, best_i = carry
+        lo = b * block
+        cells_blk = jax.lax.dynamic_slice(cells, (0, lo), (n_sub, block))
+        sc = _block_sc(table, cells_blk)
+        x = jax.lax.dynamic_slice(data_p, (lo, 0), (block, d))
+        nrm = jax.lax.dynamic_slice(norms_p, (lo,), (block,))
+        qdot = queries @ x.T
+        dist = jnp.maximum(q_norms[:, None] - 2.0 * qdot + nrm[None, :], 0.0)
+        ids = lo + jnp.arange(block, dtype=jnp.int32)
+        keep = (sc >= thresh[:, None]) & (ids < n)[None, :]
+        dist = jnp.where(keep, dist, jnp.inf)
+        cmb_d = jnp.concatenate([best_d, dist], axis=1)
+        cmb_i = jnp.concatenate(
+            [best_i, jnp.broadcast_to(ids, sc.shape)], axis=1
+        )
+        neg, pos = jax.lax.top_k(-cmb_d, k)
+        return -neg, jnp.take_along_axis(cmb_i, pos, axis=1)
+
+    best_d0 = jnp.full((queries.shape[0], k), jnp.inf, jnp.float32)
+    best_i0 = jnp.full((queries.shape[0], k), -1, jnp.int32)
+    return jax.lax.fori_loop(0, n_blocks, body, (best_d0, best_i0))
+
+
+def finalize_topk(best_d, best_i, data, queries, k: int):
+    """Canonicalize + exactify a streamed top-k state.
+
+    Sorts the k slots distance-major / id-minor (two stable argsorts), maps
+    empty slots to id -1, then recomputes the returned squared distances
+    exactly from the original vectors — a (Q, k, d) gather, the only gather
+    in the whole masked pipeline.
+    """
+    best_d = best_d[:, :k]
+    best_i = best_i[:, :k]
+    o1 = jnp.argsort(best_i, axis=1, stable=True)
+    d1 = jnp.take_along_axis(best_d, o1, axis=1)
+    i1 = jnp.take_along_axis(best_i, o1, axis=1)
+    o2 = jnp.argsort(d1, axis=1, stable=True)
+    ids = jnp.take_along_axis(i1, o2, axis=1)
+    filled = jnp.isfinite(jnp.take_along_axis(d1, o2, axis=1))
+    ids = jnp.where(filled, ids, -1)
+    vecs = jnp.take(data, jnp.maximum(ids, 0), axis=0)  # (Q, k, d)
+    diff = vecs - queries[:, None, :]
+    dists = jnp.where(ids >= 0, jnp.sum(diff * diff, axis=-1), jnp.inf)
+    return ids, dists

@@ -17,6 +17,12 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.l2dist import l2dist_pallas
 from repro.kernels.kmeans_assign import kmeans_assign_pallas
+from repro.kernels.masked_rerank import (
+    finalize_topk,
+    masked_rerank_pallas,
+    masked_rerank_stream,
+)
+from repro.kernels.schist import schist_pallas, schist_stream
 from repro.kernels.scscore import scscore_pallas
 
 
@@ -103,14 +109,62 @@ def flash_attention(q, k, v, causal: bool = True, impl: str = "auto"):
     qp = _pad_axis(q, 1, bq)
     kp = _pad_axis(k, 1, bk)
     vp = _pad_axis(v, 1, bk)
-    if kp.shape[1] > t:
-        # padded keys must never win the softmax: push them out of range by
-        # masking via huge negative values on the padded rows of k — achieved
-        # by padding q instead and masking at the causal stage is not enough
-        # for non-causal; simplest exact route: pad with zeros and rely on
-        # causal mask (causal=True) or slice-safe equal shapes (tests use
-        # block-divisible shapes for non-causal).
-        assert causal or kp.shape[1] == t, "non-causal needs bk-divisible T"
+    # Padded key columns are masked to -inf inside the kernel (t_valid), so
+    # non-bk-divisible T is exact for causal AND non-causal attention; padded
+    # query rows compute garbage that the slice below drops.
     out = flash_attention_pallas(qp, kp, vp, causal=causal, bq=bq, bk=bk,
-                                 interpret=interpret)
+                                 t_valid=t, interpret=interpret)
     return out[:, :s]
+
+
+def schist(d1s, d2s, a1s, a2s, taus, impl: str = "auto",
+           block: int = 4096) -> jax.Array:
+    """Streaming fused SC-score histogram (Q, N_s+1) int32 — the (Q, n) SC
+    matrix never materializes; see kernels/schist.py."""
+    n_levels = d1s.shape[0] + 1
+    use_pallas, interpret = _resolve(impl)
+    if not use_pallas:
+        return schist_stream(d1s, d2s, a1s, a2s, taus, n_levels=n_levels,
+                             block=block)
+    _n_sub, q, _sk = d1s.shape
+    n = a1s.shape[1]
+    bq, bn = 8, 512
+    d1p = _pad_axis(_pad_axis(d1s.astype(jnp.float32), 1, bq), 2, 128)
+    d2p = _pad_axis(_pad_axis(d2s.astype(jnp.float32), 1, bq), 2, 128)
+    a1p = _pad_axis(a1s.astype(jnp.int32), 1, bn)
+    a2p = _pad_axis(a2s.astype(jnp.int32), 1, bn)
+    taup = _pad_axis(taus.astype(jnp.float32), 1, bq)
+    out = schist_pallas(d1p, d2p, a1p, a2p, taup, n_levels=n_levels,
+                        n_valid=n, bq=bq, bn=bn, interpret=interpret)
+    return out[:q, :n_levels]
+
+
+def masked_rerank(d1s, d2s, a1s, a2s, taus, thresh, data, data_norms,
+                  queries, k: int, impl: str = "auto", block: int = 4096):
+    """Streaming masked full-matmul re-rank: ((Q, k) ids i32, (Q, k) exact
+    sq dists f32), no candidate cap and no (Q, n)/(Q, cap, d) intermediate;
+    see kernels/masked_rerank.py."""
+    use_pallas, interpret = _resolve(impl)
+    if not use_pallas:
+        bd, bi = masked_rerank_stream(
+            d1s, d2s, a1s, a2s, taus, thresh, queries, data, data_norms,
+            k=k, block=block,
+        )
+        return finalize_topk(bd, bi, data, queries, k)
+    _n_sub, q, _sk = d1s.shape
+    n = data.shape[0]
+    bq, bn = 8, 512
+    d1p = _pad_axis(_pad_axis(d1s.astype(jnp.float32), 1, bq), 2, 128)
+    d2p = _pad_axis(_pad_axis(d2s.astype(jnp.float32), 1, bq), 2, 128)
+    a1p = _pad_axis(a1s.astype(jnp.int32), 1, bn)
+    a2p = _pad_axis(a2s.astype(jnp.int32), 1, bn)
+    taup = _pad_axis(taus.astype(jnp.float32), 1, bq)
+    thp = _pad_axis(thresh.astype(jnp.int32), 0, bq)
+    qp = _pad_axis(_pad_axis(queries.astype(jnp.float32), 0, bq), 1, 128)
+    xp = _pad_axis(_pad_axis(data.astype(jnp.float32), 0, bn), 1, 128)
+    nrmp = _pad_axis(data_norms.astype(jnp.float32), 0, bn)
+    bd, bi = masked_rerank_pallas(
+        d1p, d2p, a1p, a2p, taup, thp, qp, xp, nrmp,
+        k=k, n_valid=n, bq=bq, bn=bn, interpret=interpret,
+    )
+    return finalize_topk(bd[:q], bi[:q], data, queries, k)

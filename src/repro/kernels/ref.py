@@ -39,6 +39,37 @@ def scscore_ref(d1s, d2s, a1s, a2s, taus):
     return sc
 
 
+def schist_ref(d1s, d2s, a1s, a2s, taus, n_levels: int):
+    """Per-query SC-score histogram (Q, n_levels) int32 — materializing
+    spec for the streaming schist kernel: hist[q, l] = #points with
+    SC[q, p] == l, over ALL n points (level 0 included)."""
+    sc = scscore_ref(d1s, d2s, a1s, a2s, taus)
+    return jnp.stack(
+        [jnp.sum(sc == l, axis=1) for l in range(n_levels)], axis=1
+    ).astype(jnp.int32)
+
+
+def masked_rerank_ref(d1s, d2s, a1s, a2s, taus, thresh, queries, data,
+                      data_norms, k: int):
+    """Masked full re-rank spec: exact distances of every point with
+    SC >= thresh, top-k smallest (distance-major, id-minor; id -1 / +inf
+    where fewer than k points pass). Materializes the (Q, n) matrices the
+    streaming kernel avoids."""
+    sc = scscore_ref(d1s, d2s, a1s, a2s, taus)
+    q = queries.astype(jnp.float32)
+    x = data.astype(jnp.float32)
+    qn = jnp.sum(q * q, axis=1, keepdims=True)
+    dist = jnp.maximum(qn - 2.0 * (q @ x.T) + data_norms[None, :], 0.0)
+    dist = jnp.where(sc >= thresh[:, None], dist, jnp.inf)
+    neg, ids = jax.lax.top_k(-dist, k)  # stable: ties -> lowest id
+    top_d = -neg
+    ids = jnp.where(jnp.isfinite(top_d), ids, -1)
+    vecs = jnp.take(data, jnp.maximum(ids, 0), axis=0)
+    diff = vecs - queries[:, None, :]
+    exact = jnp.where(ids >= 0, jnp.sum(diff * diff, axis=-1), jnp.inf)
+    return ids.astype(jnp.int32), exact
+
+
 def flash_attention_ref(q, k, v, causal: bool = True):
     """Softmax attention oracle. q (BH,S,hd), k/v (BH,T,hd)."""
     s = jnp.einsum(

@@ -60,6 +60,7 @@ def abstract_index(n: int, d: int, cfg, mesh, data_axes):
         transform=tr, dim_perm=None, subspaces=subs,
         data=jax.ShapeDtypeStruct((n, d), jnp.float32),
         sub_dims=(s,) * cfg.n_subspaces,
+        data_norms=jax.ShapeDtypeStruct((n,), jnp.float32),
     )
     specs = index_pspecs(idx, data_axes)
     return jax.tree.map(

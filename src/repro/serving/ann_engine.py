@@ -9,10 +9,11 @@ Request path
 ------------
 ``submit()`` enqueues; ``drain()`` repeatedly
 
-  1. groups queued requests by their *effective* ``(k, cfg)`` — a
-     per-request ``beta`` override becomes ``dataclasses.replace(cfg,
-     beta=...)``, so overrides are first-class while steady-state traffic
-     with default parameters shares one executable;
+  1. groups queued requests by their *effective* ``(k, cfg)`` — per-request
+     ``beta`` / ``rerank`` overrides become ``dataclasses.replace(cfg,
+     ...)``, so overrides (including switching between the gather and the
+     streaming masked-full re-rank pipelines) are first-class while
+     steady-state traffic with default parameters shares one executable;
   2. micro-batches up to ``max_batch`` requests of a group and pads the
      query matrix up to a shape bucket (:mod:`repro.serving.batching` —
      every row of the TaCo query path is independent, so padding cannot
@@ -61,6 +62,9 @@ class AnnRequest:
     query: np.ndarray  # (d,) float32
     k: int | None = None  # result count; default cfg.k
     beta: float | None = None  # re-rank budget ratio; default cfg.beta
+    #: re-rank strategy override ('gather' | 'masked_full' | 'auto');
+    #: default cfg.rerank. masked_full requests can never report truncated.
+    rerank: str | None = None
 
 
 @dataclasses.dataclass
@@ -310,6 +314,10 @@ class AnnServingEngine:
                 raise ValueError(f"k={request.k} out of range (0, {self.index.n}]")
         if request.beta is not None and not 0.0 < float(request.beta) <= 1.0:
             raise ValueError(f"beta={request.beta} out of range (0, 1]")
+        if request.rerank is not None and request.rerank not in (
+            "gather", "masked_full", "auto",
+        ):
+            raise ValueError(f"unknown rerank override {request.rerank!r}")
         rid = self._next_id
         self._next_id += 1
         self._queue.append((rid, request))
@@ -348,6 +356,8 @@ class AnnServingEngine:
         cfg = self.cfg
         if req.beta is not None and req.beta != cfg.beta:
             cfg = dataclasses.replace(cfg, beta=float(req.beta))
+        if req.rerank is not None and req.rerank != cfg.rerank:
+            cfg = dataclasses.replace(cfg, rerank=req.rerank)
         return k, cfg
 
     def _run_batch(self, group_key, batch, out: dict) -> None:

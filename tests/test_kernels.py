@@ -154,3 +154,16 @@ class TestFlashAttention:
         got = ops.flash_attention(q, k, v, causal=True, impl="pallas")
         want = ref.flash_attention_ref(q, k, v, True)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("s,t", [(130, 130), (64, 130), (100, 257)])
+    def test_padded_noncausal_keys_masked(self, s, t):
+        """Regression: non-bk-divisible T in NON-causal mode — zero-padded
+        key columns score 0 and used to win over real negative scores; the
+        kernel now masks them to -inf (t_valid)."""
+        rng = np.random.default_rng(s + t)
+        q = jnp.asarray(rng.standard_normal((2, s, 16)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((2, t, 16)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((2, t, 16)), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal=False, impl="pallas")
+        want = ref.flash_attention_ref(q, k, v, False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,238 @@
+"""Streaming masked-full re-rank pipeline (ISSUE 3): kernel-vs-oracle
+sweeps for schist / masked_rerank, masked ≡ gather equivalence whenever the
+gather path does not truncate, and exact dynamic-shape Algorithm 5 semantics
+where it does.
+
+Equivalence tests use integer-valued vectors: squared distances are then
+exactly representable in float32 no matter the formulation (diff-square vs
+||q||^2 - 2q.x + ||x||^2, blockwise vs monolithic), so id comparisons are
+bitwise-deterministic instead of ulp-tie flaky.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build, query_with_stats, taco_config
+from repro.core.config import resolve_rerank, suco_config
+from repro.core.selection import _alg5_threshold_reference, fixed_budget
+from repro.core.taco import compute_sc_scores
+from repro.kernels import ops, ref
+from repro.kernels.masked_rerank import finalize_topk, masked_rerank_stream
+from repro.kernels.schist import schist_stream
+
+
+def _int_dataset(rng, n, d, q, lo=-10, hi=11):
+    data = rng.integers(lo, hi, (n, d)).astype(np.float32)
+    queries = rng.integers(lo, hi, (q, d)).astype(np.float32)
+    return data, queries
+
+
+def _case(rng, n_sub, q, sqrt_k, n, d=16):
+    d1s = jnp.asarray(rng.uniform(0, 4, (n_sub, q, sqrt_k)), jnp.float32)
+    d2s = jnp.asarray(rng.uniform(0, 4, (n_sub, q, sqrt_k)), jnp.float32)
+    a1s = jnp.asarray(rng.integers(0, sqrt_k, (n_sub, n)), jnp.int32)
+    a2s = jnp.asarray(rng.integers(0, sqrt_k, (n_sub, n)), jnp.int32)
+    taus = jnp.asarray(rng.uniform(1, 5, (n_sub, q)), jnp.float32)
+    data, queries = _int_dataset(rng, n, d, q, -8, 9)
+    norms = jnp.sum(jnp.asarray(data) ** 2, axis=1)
+    thresh = jnp.asarray(rng.integers(0, n_sub + 1, (q,)), jnp.int32)
+    return d1s, d2s, a1s, a2s, taus, thresh, jnp.asarray(data), norms, jnp.asarray(queries)
+
+
+# ------------------------------------------------------------ schist kernel
+@pytest.mark.parametrize("n_sub,q,sqrt_k,n", [
+    (2, 3, 5, 50),      # everything unpadded-odd
+    (6, 8, 16, 512),    # block-divisible
+    (4, 16, 32, 1030),  # padded n
+    (1, 1, 128, 100),
+])
+def test_schist_pallas_matches_ref(n_sub, q, sqrt_k, n):
+    rng = np.random.default_rng(n_sub * 100 + q)
+    d1s, d2s, a1s, a2s, taus, *_ = _case(rng, n_sub, q, sqrt_k, n)
+    got = ops.schist(d1s, d2s, a1s, a2s, taus, impl="pallas")
+    want = ref.schist_ref(d1s, d2s, a1s, a2s, taus, n_sub + 1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # every point lands in exactly one bucket — padding can never leak in
+    np.testing.assert_array_equal(np.asarray(got).sum(1), n)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 9), st.integers(2, 20),
+       st.integers(1, 200), st.integers(0, 2**31 - 1))
+def test_schist_stream_property(n_sub, q, sqrt_k, n, seed):
+    rng = np.random.default_rng(seed)
+    d1s, d2s, a1s, a2s, taus, *_ = _case(rng, n_sub, q, sqrt_k, n)
+    got = np.asarray(schist_stream(d1s, d2s, a1s, a2s, taus,
+                                   n_levels=n_sub + 1, block=64))
+    want = np.asarray(ref.schist_ref(d1s, d2s, a1s, a2s, taus, n_sub + 1))
+    np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------- masked_rerank kernel
+@pytest.mark.parametrize("n_sub,q,sqrt_k,n,k", [
+    (2, 3, 5, 50, 5),
+    (6, 8, 16, 512, 10),   # block-divisible
+    (4, 5, 32, 1030, 17),  # padded n, odd k
+    (3, 1, 8, 40, 40),     # k == n
+])
+def test_masked_rerank_pallas_matches_ref(n_sub, q, sqrt_k, n, k):
+    rng = np.random.default_rng(n_sub * 1000 + n)
+    d1s, d2s, a1s, a2s, taus, thresh, data, norms, queries = _case(
+        rng, n_sub, q, sqrt_k, n)
+    gi, gd = ops.masked_rerank(d1s, d2s, a1s, a2s, taus, thresh, data, norms,
+                               queries, k, impl="pallas")
+    wi, wd = ref.masked_rerank_ref(d1s, d2s, a1s, a2s, taus, thresh, queries,
+                                   data, norms, k)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 6), st.integers(2, 16),
+       st.integers(3, 150), st.integers(1, 12), st.integers(0, 2**31 - 1))
+def test_masked_rerank_stream_property(n_sub, q, sqrt_k, n, k, seed):
+    rng = np.random.default_rng(seed)
+    k = min(k, n)
+    d1s, d2s, a1s, a2s, taus, thresh, data, norms, queries = _case(
+        rng, n_sub, q, sqrt_k, n)
+    bd, bi = masked_rerank_stream(d1s, d2s, a1s, a2s, taus, thresh, queries,
+                                  data, norms, k=k, block=32)
+    gi, gd = finalize_topk(bd, bi, data, queries, k)
+    wi, wd = ref.masked_rerank_ref(d1s, d2s, a1s, a2s, taus, thresh, queries,
+                                   data, norms, k)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+
+
+# ------------------------------------------------------- end-to-end pipeline
+CFG = dict(n_subspaces=3, subspace_dim=6, n_clusters=64, alpha=0.05,
+           beta=0.02, k=10)
+
+
+@pytest.fixture(scope="module")
+def int_index():
+    rng = np.random.default_rng(7)
+    data, queries = _int_dataset(rng, 4000, 32, 8)
+    cfg = taco_config(**CFG)
+    return build(data, cfg), data, queries
+
+
+def test_masked_equals_gather_when_not_truncated(int_index):
+    """masked_full ≡ gather whenever candidate_demand <= cap (here cap=n)."""
+    idx, _data, queries = int_index
+    cfg = taco_config(**CFG, candidate_cap=4000)
+    gi, gd, gs = query_with_stats(idx, queries, cfg)
+    assert not np.asarray(gs["truncated"]).any()
+    mi, md, ms = query_with_stats(
+        idx, queries, dataclasses.replace(cfg, rerank="masked_full"))
+    np.testing.assert_array_equal(np.asarray(mi), np.asarray(gi))
+    np.testing.assert_allclose(np.asarray(md), np.asarray(gd), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ms["sc_threshold"]),
+                                  np.asarray(gs["sc_threshold"]))
+    np.testing.assert_array_equal(np.asarray(ms["candidate_demand"]),
+                                  np.asarray(gs["candidate_demand"]))
+    assert not np.asarray(ms["truncated"]).any()
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_masked_equals_gather_property(seed):
+    rng = np.random.default_rng(seed)
+    data, queries = _int_dataset(rng, 1500, 24, 4)
+    cfg = taco_config(n_subspaces=3, subspace_dim=6, n_clusters=36,
+                      alpha=0.1, beta=0.05, k=5, candidate_cap=1500,
+                      seed=seed % 97)
+    idx = build(data, cfg)
+    gi, gd, gs = query_with_stats(idx, queries, cfg)
+    assert not np.asarray(gs["truncated"]).any()  # cap == n: can't truncate
+    mi, md, _ms = query_with_stats(
+        idx, queries, dataclasses.replace(cfg, rerank="masked_full"))
+    np.testing.assert_array_equal(np.asarray(mi), np.asarray(gi))
+    np.testing.assert_allclose(np.asarray(md), np.asarray(gd), rtol=1e-6)
+
+
+def _dynamic_alg5_oracle(sc_row, data, query, beta_n, n_subspaces, k):
+    """Host-side dynamic-shape Algorithm 5 + exact re-rank (float64):
+    the ground truth the masked pipeline must match exactly."""
+    hist = np.bincount(sc_row, minlength=n_subspaces + 1)
+    th = _alg5_threshold_reference(hist, beta_n, n_subspaces)
+    cand = np.flatnonzero(sc_row >= th)  # TRUE dynamic-shape candidate set
+    d64 = np.sum((data[cand].astype(np.float64) - query) ** 2, axis=1)
+    order = np.lexsort((cand, d64))[:k]  # distance-major, id-minor
+    return cand[order], d64[order]
+
+
+def test_masked_exact_where_gather_truncates(int_index):
+    """The acceptance case: on inputs where the gather path reports
+    truncated=True, masked_full still returns the exact dynamic-shape
+    Alg. 5 result (and never reports truncation)."""
+    idx, data, queries = int_index
+    cfg = taco_config(**CFG)  # auto cap: 4*beta*n = 320
+    gi, _gd, gs = query_with_stats(idx, queries, cfg)
+    truncated = np.asarray(gs["truncated"])
+    assert truncated.any(), "fixture must exercise gather truncation"
+    mi, md, ms = query_with_stats(
+        idx, queries, dataclasses.replace(cfg, rerank="masked_full"))
+    assert not np.asarray(ms["truncated"]).any()
+    sc, _ = compute_sc_scores(idx, queries, cfg)
+    sc = np.asarray(sc)
+    beta_n = cfg.beta * data.shape[0]
+    differs = 0
+    for qi in range(queries.shape[0]):
+        want_ids, want_d = _dynamic_alg5_oracle(
+            sc[qi], data, queries[qi], beta_n, cfg.n_subspaces, cfg.k)
+        np.testing.assert_array_equal(np.asarray(mi[qi]), want_ids)
+        np.testing.assert_allclose(np.asarray(md[qi]), want_d, rtol=1e-6)
+        differs += int(not np.array_equal(np.asarray(gi[qi]), want_ids))
+    # at least one truncated query must actually have lost real neighbors,
+    # otherwise this test isn't exercising the difference
+    assert differs > 0
+
+
+def test_fixed_selection_rides_masked_pipeline(int_index):
+    """SuCo mode: same histogram-derived threshold as the rank-cut, demand
+    includes threshold-level ties (>= budget), results stay exact."""
+    idx, data, queries = int_index
+    cfg = suco_config(**CFG, candidate_cap=4000)
+    # reuse the TaCo-built index but query in fixed-selection mode
+    cfg = dataclasses.replace(cfg, transform="entropy")
+    gi, gd, gs = query_with_stats(idx, queries, cfg)
+    mi, md, ms = query_with_stats(
+        idx, queries, dataclasses.replace(cfg, rerank="masked_full"))
+    np.testing.assert_array_equal(np.asarray(ms["sc_threshold"]),
+                                  np.asarray(gs["sc_threshold"]))
+    budget = fixed_budget(cfg.beta * data.shape[0], data.shape[0])
+    assert (np.asarray(ms["candidate_demand"]) >= budget).all()
+    # masked fixed mode re-ranks every tie at the threshold level, so its
+    # top-k distances can only be <= the rank-cut gather path's
+    md_np, gd_np = np.asarray(md), np.asarray(gd)
+    assert (md_np <= gd_np + 1e-6).all()
+
+
+def test_rerank_auto_resolution():
+    cfg = taco_config(rerank="auto")
+    assert resolve_rerank(cfg) == "masked_full"
+    assert resolve_rerank(cfg, distributed=True) == "gather"
+    with pytest.raises(ValueError):
+        resolve_rerank(taco_config(rerank="bogus"))
+
+
+def test_masked_serving_engine_override(int_index):
+    """Per-request rerank override through the serving engine: identical
+    results, truncated never set on the masked path."""
+    from repro.serving import AnnRequest, AnnServingEngine
+
+    idx, _data, queries = int_index
+    cfg = taco_config(**CFG, candidate_cap=4000)
+    engine = AnnServingEngine(idx, cfg, max_batch=8)
+    res_g = engine.search([AnnRequest(query=q) for q in queries])
+    res_m = engine.search(
+        [AnnRequest(query=q, rerank="masked_full") for q in queries])
+    for a, b in zip(res_g, res_m):
+        np.testing.assert_array_equal(a.ids, b.ids)
+        assert not b.truncated
+    with pytest.raises(ValueError):
+        engine.submit(AnnRequest(query=queries[0], rerank="bogus"))

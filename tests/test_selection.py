@@ -9,6 +9,7 @@ from repro.core.selection import (
     compact_above_threshold,
     fixed_budget,
     fixed_threshold,
+    fixed_threshold_from_hist,
     query_aware_threshold,
     sc_histogram,
     select_candidates,
@@ -111,6 +112,30 @@ def test_compact_above_threshold_matches_mask():
         expected = np.flatnonzero(sc_np[q] >= int(thresh[q]))
         assert int(count[q]) == expected.size
         np.testing.assert_array_equal(np.sort(ids[q][valid[q]]), expected)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(2, 8),
+    st.integers(20, 400),
+    st.floats(0.5, 150.0),
+    st.integers(0, 2**31 - 1),
+)
+def test_fixed_threshold_from_hist_matches_rank_cut(n_s, n, beta_n, seed):
+    """The histogram-derived fixed threshold equals fixed_threshold's
+    (SC value of the budget-th best point); its demand counts all points
+    at or above it (ties included), so demand >= budget always."""
+    rng = np.random.default_rng(seed)
+    sc = jnp.asarray(rng.integers(0, n_s + 1, (3, n)), jnp.int32)
+    want_t, want_c = fixed_threshold(sc, beta_n, n_s)
+    hist = sc_histogram(sc, n_s)
+    got_t, got_c = fixed_threshold_from_hist(hist, beta_n, n)
+    np.testing.assert_array_equal(np.asarray(got_t), np.asarray(want_t))
+    budget = fixed_budget(beta_n, n)
+    assert (np.asarray(got_c) >= budget).all()
+    # demand == exact count of points at or above the threshold
+    want_demand = np.asarray((sc >= got_t[:, None]).sum(1))
+    np.testing.assert_array_equal(np.asarray(got_c), want_demand)
 
 
 def test_fixed_budget_is_ceil():
