@@ -111,9 +111,10 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
     import jax
     import numpy as np
 
-    from repro.core import build, make_query_fn, taco_config
+    from repro.ann import AnnIndex
+    from repro.core import make_query_fn, taco_config
     from repro.data import even_shard_total, gmm_dataset, make_queries
-    from repro.serving import AnnRequest, AnnServingEngine
+    from repro.serving import AnnRequest
 
     data, held_out = make_queries(
         gmm_dataset(even_shard_total(n, 128, shards), d, seed=seed), 128
@@ -121,11 +122,13 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
     cfg = taco_config(n_subspaces=6, subspace_dim=8, n_clusters=1024,
                       alpha=0.05, beta=0.02, k=k)
     print(f"building TaCo index: n={data.shape[0]} d={d} ...", flush=True)
-    index = build(data, cfg)
+    ann = AnnIndex.build(data, cfg)
+    index = ann.sc_index
     rng = np.random.default_rng(seed)
     qs = held_out[rng.integers(0, held_out.shape[0], requests)]
 
-    # --- adhoc: a fresh jit closure per request (today's caller path) -----
+    # --- adhoc: a fresh jit closure per request (the pre-engine caller
+    # path, kept as the legacy-wrapper baseline) --------------------------
     t0 = time.perf_counter()
     for i in range(requests):
         fn = make_query_fn(index, cfg)  # per-caller closure: traces+compiles
@@ -141,9 +144,9 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
     cached_s = time.perf_counter() - t0
 
     # --- batched engine: waves of `pressure` concurrent requests ----------
-    def run_engine(backend, run_cfg, **bk):
-        engine = AnnServingEngine(index, run_cfg, max_batch=max(pressure, 1),
-                                  backend=backend, **bk)
+    def run_engine(placement, run_cfg, **bk):
+        engine = ann.engine(placement, cfg=run_cfg,
+                            max_batch=max(pressure, 1), **bk)
         engine.search([AnnRequest(query=q) for q in qs[:pressure]])  # warm
         engine.reset_telemetry()
         t0 = time.perf_counter()

@@ -8,6 +8,7 @@ import numpy as np
 
 import functools
 
+from repro.ann import AnnIndex
 from repro.core import ABLATIONS, build, query, SCConfig
 
 #: jit-compiled query with the index as a traced argument (no constant
@@ -41,12 +42,13 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 
 def build_method(name: str, data, **cfg_kw) -> tuple:
-    """(index, cfg, build_seconds)"""
+    """(index, cfg, build_seconds) — built through the AnnIndex facade
+    (same Alg. 1-3 build; returns the raw SCIndex the figure modules use)."""
     cfg = ABLATIONS[name](**cfg_kw)
     t0 = time.perf_counter()
-    idx = build(data, cfg)
-    jax.block_until_ready(idx.data)
-    return idx, cfg, time.perf_counter() - t0
+    ann = AnnIndex.build(data, cfg)
+    jax.block_until_ready(ann.sc_index.data)
+    return ann.sc_index, cfg, time.perf_counter() - t0
 
 
 def emit(rows: list[tuple], header=("name", "us_per_call", "derived")):

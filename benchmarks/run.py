@@ -2,7 +2,9 @@
 Prints ``name,us_per_call,derived`` CSV per row (see each module).
 ``--json [PATH]`` additionally persists every module's rows + wall time
 (default path BENCH_query.json at the repo root — the committed baseline
-future PRs diff against)."""
+future PRs diff against). Index construction across the modules goes
+through the :class:`repro.ann.AnnIndex` facade (``benchmarks.common
+.build_method``)."""
 from __future__ import annotations
 
 import argparse

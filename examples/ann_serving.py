@@ -5,17 +5,18 @@ request stream (default / small-k / loose-beta), read the telemetry.
 """
 import numpy as np
 
-from repro.core import build, taco_config
+from repro.ann import AnnIndex
+from repro.core import taco_config
 from repro.data import gmm_dataset, make_queries
-from repro.serving import AnnRequest, AnnServingEngine
+from repro.serving import AnnRequest
 
 
 def main():
     data, queries = make_queries(gmm_dataset(10000, 64, seed=0), 32)
     cfg = taco_config(n_subspaces=4, subspace_dim=8, n_clusters=256,
                       alpha=0.05, beta=0.02, k=10)
-    index = build(data, cfg)
-    engine = AnnServingEngine(index, cfg, max_batch=16)
+    index = AnnIndex.build(data, cfg)
+    engine = index.engine(max_batch=16)
 
     # a mixed stream: default requests, a small-k request, a loose-beta one
     requests = [AnnRequest(query=q) for q in queries[:8]]

@@ -14,9 +14,10 @@ force_host_devices(4)
 
 import numpy as np
 
-from repro.core import build, taco_config
+from repro.ann import AnnIndex
+from repro.core import taco_config
 from repro.data import even_shard_total, gmm_dataset, make_queries
-from repro.serving import AnnRequest, AnnServingEngine
+from repro.serving import AnnRequest
 
 
 def main():
@@ -24,14 +25,15 @@ def main():
     data, queries = make_queries(gmm_dataset(n, 64, seed=0), 32)
     cfg = taco_config(n_subspaces=4, subspace_dim=8, n_clusters=256,
                       alpha=0.05, beta=0.02, k=10)
-    index = build(data, cfg)
+    index = AnnIndex.build(data, cfg)
 
     requests = [AnnRequest(query=q) for q in queries[:8]]
     requests.append(AnnRequest(query=queries[8], k=3))  # per-request override
 
-    single = AnnServingEngine(index, cfg, max_batch=16)
-    sharded = AnnServingEngine(index, cfg, max_batch=16, backend="sharded",
-                               shards=4)
+    # pin placements: on this 4-device host the default placement="auto"
+    # would shard both engines
+    single = index.engine("single", max_batch=16)
+    sharded = index.engine("sharded", shards=4, max_batch=16)
 
     r_single = single.search(requests)
     r_sharded = sharded.search(requests)

@@ -1,10 +1,14 @@
-"""Quickstart: build a TaCo index and answer k-ANNS queries.
+"""Quickstart: the AnnIndex lifecycle — build, search, save, load.
 
     PYTHONPATH=src:. python examples/quickstart.py
 """
+import os
+import tempfile
+
 import numpy as np
 
-from repro.core import build, query, query_with_stats, taco_config
+from repro.ann import AnnIndex
+from repro.core import taco_config
 from repro.data import gmm_dataset, make_queries
 from repro.utils import exact_knn, recall_at_k
 
@@ -20,22 +24,33 @@ def main():
     )
 
     # 3. build: entropy-averaging transform (Alg. 1+2) + per-subspace IMIs (Alg. 3)
-    index = build(data, cfg)
+    index = AnnIndex.build(data, cfg)
     red = 1 - cfg.n_subspaces * cfg.subspace_dim / data.shape[1]
     print(f"index built: {index.index_bytes / 1e6:.1f} MB, "
           f"dimensionality reduction {red:.0%} ({data.shape[1]} -> "
           f"{cfg.n_subspaces * cfg.subspace_dim})")
 
     # 4. query (Alg. 6: collision counting -> query-aware selection -> re-rank)
-    ids, dists, stats = query_with_stats(index, queries, cfg)
+    ids, dists, stats = index.search_with_stats(queries)
 
     gt_d, gt_i = exact_knn(data, queries, 10)
     print(f"recall@10 = {recall_at_k(np.asarray(ids), gt_i, 10):.4f}")
+    counts = np.asarray(stats["candidate_count"])
     print(f"query-aware candidate counts: "
-          f"min={int(np.asarray(stats['candidate_count']).min())} "
-          f"median={int(np.median(np.asarray(stats['candidate_count'])))} "
-          f"max={int(np.asarray(stats['candidate_count']).max())} "
+          f"min={int(counts.min())} median={int(np.median(counts))} "
+          f"max={int(counts.max())} "
           f"(fixed methods would re-rank {int(cfg.beta * data.shape[0])} for every query)")
+
+    # 5. persist + reload: a server restart never rebuilds (atomic npz+manifest)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "taco_index")
+        index.save(path)
+        loaded = AnnIndex.load(path)
+        ids2, dists2 = loaded.search(queries)
+        assert np.array_equal(np.asarray(ids2), np.asarray(ids))
+        assert np.array_equal(np.asarray(dists2), np.asarray(dists))
+        print(f"save -> load roundtrip: results bitwise-identical "
+              f"({sum(os.path.getsize(os.path.join(r, f)) for r, _d, fs in os.walk(path) for f in fs) / 1e6:.1f} MB on disk)")
 
 
 if __name__ == "__main__":

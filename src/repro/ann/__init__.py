@@ -1,0 +1,35 @@
+"""repro.ann — the ANN lifecycle facade.
+
+One coherent surface over the subspace-collision stack::
+
+    index = AnnIndex.build(data, cfg)      # repro.core.taco.build (Alg. 1-3)
+    index.save(path); AnnIndex.load(path)  # repro.checkpoint npz + manifest
+    index.searcher(placement=...)          # single | sharded | auto;
+                                           #   owns the (bucket, k, cfg)
+                                           #   executable cache
+    index.engine(...)                      # AnnServingEngine over a Searcher
+
+The legacy free functions (``repro.core.build`` / ``query`` /
+``query_with_stats`` / ``make_query_fn``) and the engine backend kwargs
+remain supported; they run through the same machinery this package fronts.
+"""
+from repro.ann.index import AnnIndex
+from repro.ann.persistence import load_index, save_index
+from repro.ann.searcher import (
+    AnnBatchResult,
+    Searcher,
+    ShardedSearcher,
+    SingleDeviceSearcher,
+    make_searcher,
+)
+
+__all__ = [
+    "AnnBatchResult",
+    "AnnIndex",
+    "Searcher",
+    "ShardedSearcher",
+    "SingleDeviceSearcher",
+    "load_index",
+    "make_searcher",
+    "save_index",
+]

@@ -1,0 +1,163 @@
+"""`AnnIndex` — the ANN lifecycle facade: build → persist → place → serve.
+
+One object owns the whole index lifecycle::
+
+    from repro.ann import AnnIndex
+
+    index = AnnIndex.build(data, taco_config(k=10))   # paper Alg. 1-3
+    index.save("idx/")                                # atomic npz + manifest
+    index = AnnIndex.load("idx/")                     # bitwise-identical
+
+    ids, dists = index.search(queries)                # one-shot (Alg. 6)
+    s = index.searcher(placement="sharded", shards=8) # owns the jit cache
+    ids, dists, stats = s.search_with_stats(queries, k=5, rerank="masked_full")
+    engine = index.engine(max_batch=64)               # micro-batching server
+
+Under the facade nothing is new: ``build`` is :func:`repro.core.taco.build`,
+searchers compile :func:`repro.core.taco.query_with_stats` or the
+shard_map query in :mod:`repro.core.distributed`, persistence rides
+:mod:`repro.checkpoint`, and the engine is
+:class:`repro.serving.ann_engine.AnnServingEngine` whose backends are thin
+adapters over this module's searchers. The legacy free functions
+(``build`` / ``query`` / ``query_with_stats`` / ``make_query_fn``) remain
+supported entry points over the same machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.ann.persistence import load_index, save_index
+from repro.ann.searcher import Searcher, make_searcher
+from repro.core.config import SCConfig
+from repro.core.taco import SCIndex
+from repro.core.taco import build as _build
+
+
+@dataclasses.dataclass
+class AnnIndex:
+    """A built subspace-collision index plus the config it was built with.
+
+    ``cfg`` is the index's default query configuration: ``searcher()`` /
+    ``engine()`` / ``search()`` read it, per-call ``k``/``beta``/``rerank``
+    arguments override it without rebuilding anything.
+    """
+
+    sc_index: SCIndex
+    cfg: SCConfig
+
+    # ------------------------------------------------------------- build --
+    @classmethod
+    def build(cls, data, cfg: SCConfig) -> "AnnIndex":
+        """Build an index over ``data`` (n, d) — paper Algorithm 3 (plus
+        Alg. 1/2 when ``cfg.transform == 'entropy'``)."""
+        return cls(sc_index=_build(data, cfg), cfg=cfg)
+
+    # ----------------------------------------------------------- persist --
+    def save(self, path: str) -> str:
+        """Persist index + config under directory ``path`` (atomic)."""
+        return save_index(self.sc_index, self.cfg, path)
+
+    @classmethod
+    def load(cls, path: str) -> "AnnIndex":
+        """Load an index saved by :meth:`save`. Search results over the
+        loaded index are bitwise-identical to the index that was saved."""
+        sc_index, cfg = load_index(path)
+        return cls(sc_index=sc_index, cfg=cfg)
+
+    # ------------------------------------------------------------- serve --
+    def searcher(
+        self,
+        placement: str = "auto",
+        *,
+        mesh=None,
+        shards: int | None = None,
+        data_axes=None,
+        query_axes=(),
+        max_cached_fns: int = 64,
+        cfg: SCConfig | None = None,
+    ) -> Searcher:
+        """A :class:`Searcher` over this index — owns device placement and
+        the ``(bucket, k, cfg)`` executable cache. ``cfg`` overrides the
+        index default config as the searcher's default. See
+        :func:`repro.ann.searcher.make_searcher` for ``placement``."""
+        return make_searcher(
+            self.sc_index,
+            self.cfg if cfg is None else cfg,
+            placement,
+            mesh=mesh,
+            shards=shards,
+            data_axes=data_axes,
+            query_axes=query_axes,
+            max_cached_fns=max_cached_fns,
+        )
+
+    def engine(
+        self,
+        placement: str = "auto",
+        *,
+        mesh=None,
+        shards: int | None = None,
+        max_cached_fns: int = 64,
+        cfg: SCConfig | None = None,
+        **engine_kwargs,
+    ):
+        """An :class:`~repro.serving.ann_engine.AnnServingEngine` serving
+        this index: micro-batching, per-request overrides, result cache,
+        telemetry. The engine's :class:`AnnBackend` is a thin adapter over
+        a :meth:`searcher` built here for ``placement`` (same ``"auto"``
+        default and resolution as :meth:`searcher`); ``cfg`` overrides
+        the index default config for the engine AND its searcher."""
+        from repro.serving.ann_engine import AnnServingEngine
+
+        eff_cfg = self.cfg if cfg is None else cfg
+        searcher = self.searcher(
+            placement, mesh=mesh, shards=shards,
+            max_cached_fns=max_cached_fns, cfg=eff_cfg,
+        )
+        return AnnServingEngine(
+            self.sc_index,
+            eff_cfg,
+            backend=searcher,
+            **engine_kwargs,
+        )
+
+    # ------------------------------------------------------------- query --
+    def search(self, queries, *, k=None, beta=None, rerank=None):
+        """One-shot search on a lazily-created single-device searcher
+        (cached on the index, so repeated calls reuse its executables)."""
+        return self._default_searcher().search(
+            queries, k=k, beta=beta, rerank=rerank
+        )
+
+    def search_with_stats(self, queries, *, k=None, beta=None, rerank=None):
+        """One-shot :meth:`Searcher.search_with_stats` — see :meth:`search`."""
+        return self._default_searcher().search_with_stats(
+            queries, k=k, beta=beta, rerank=rerank
+        )
+
+    def _default_searcher(self) -> Searcher:
+        s = getattr(self, "_searcher", None)
+        if s is None:
+            s = self._searcher = self.searcher("single")
+        return s
+
+    def replace_cfg(self, **changes) -> "AnnIndex":
+        """A view of the same built index with config fields replaced
+        (e.g. ``index.replace_cfg(rerank='masked_full')``)."""
+        return AnnIndex(
+            sc_index=self.sc_index, cfg=dataclasses.replace(self.cfg, **changes)
+        )
+
+    # ------------------------------------------------------------- props --
+    @property
+    def n(self) -> int:
+        return self.sc_index.n
+
+    @property
+    def d(self) -> int:
+        return self.sc_index.data.shape[1]
+
+    @property
+    def index_bytes(self) -> int:
+        """Index memory footprint, excluding the dataset (paper protocol)."""
+        return self.sc_index.index_bytes

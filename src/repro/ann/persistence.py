@@ -1,0 +1,152 @@
+"""Index persistence — `SCIndex` + `SCConfig` on the checkpoint machinery.
+
+The paper's headline claim is cheap *indexing* (8x faster, 0.6x memory vs
+SuCo), which makes the index lifecycle — build once, persist, place, serve —
+the thing worth owning. This module serializes a built index the same way
+the training side checkpoints (``repro.checkpoint``): one atomic
+``arrays.npz`` + JSON treedef manifest (written to ``tmp.*`` then renamed),
+so a crash mid-save never corrupts an existing index.
+
+On-disk layout of ``save_index(index, cfg, path)``::
+
+    path/
+      step_0/          # repro.checkpoint.save_pytree of the SCIndex pytree
+        arrays.npz     #   all leaves: transform, IMI subspaces, data,
+        manifest.json  #   data_norms; dtype/shape-checked on restore.
+                       #   Carries the index meta (format tag + SCConfig +
+                       #   structure: sub_dims, n, d, which optional leaves
+                       #   exist) under "extra" — config and arrays commit
+                       #   in ONE atomic rename, so a crash mid-re-save can
+                       #   never pair a new config with old arrays.
+      ann_index.json   # human-readable mirror of that meta (never load-
+                       # bearing; written after the atomic save)
+
+``load_index`` rebuilds the exact pytree: optional leaves (``transform`` /
+``dim_perm`` / ``data_norms``) round-trip including their *absence* — a
+legacy-style index with ``data_norms=None`` loads as such and queries
+through the fallback norm path (:func:`repro.core.taco.data_norms_of`).
+Restore validates every leaf's path, dtype and shape against the structure
+recorded at save time, so results are bitwise-identical to the in-memory
+index that was saved.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.checkpoint import read_manifest, restore_pytree, save_pytree
+from repro.core.config import SCConfig
+from repro.core.imi import IMISubspace, split_halves
+from repro.core.taco import SCIndex
+from repro.core.transform import SubspaceTransform
+
+#: The SCIndex pytree is stored as checkpoint "step 0" — an index has no
+#: training step; the fixed tag keeps the checkpoint layout untouched.
+INDEX_STEP = 0
+FORMAT = "taco-ann-index"
+FORMAT_VERSION = 1
+
+
+def _meta_path(path: str) -> str:
+    return os.path.join(path, "ann_index.json")
+
+
+def save_index(index: SCIndex, cfg: SCConfig, path: str) -> str:
+    """Persist ``(index, cfg)`` under directory ``path``; returns ``path``."""
+    os.makedirs(path, exist_ok=True)
+    meta = {
+        "format": FORMAT,
+        "version": FORMAT_VERSION,
+        "config": dataclasses.asdict(cfg),
+        "n": int(index.n),
+        "d": int(index.data.shape[1]),
+        "sub_dims": [int(s) for s in index.sub_dims],
+        "has_transform": index.transform is not None,
+        "has_dim_perm": index.dim_perm is not None,
+        "has_data_norms": index.data_norms is not None,
+    }
+    # device -> host once, then the checkpoint writer's atomic npz+manifest;
+    # the meta rides the manifest so config and arrays commit together.
+    host_index = jax.tree.map(np.asarray, index)
+    save_pytree(host_index, path, INDEX_STEP, extra_meta=meta)
+    # Human-readable mirror for operators (`cat path/ann_index.json`);
+    # load_index never reads it.
+    tmp = _meta_path(path) + f".tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(meta, f, indent=1)
+    os.replace(tmp, _meta_path(path))
+    return path
+
+
+def _template_index(meta: dict, cfg: SCConfig) -> SCIndex:
+    """A ShapeDtypeStruct-leaved SCIndex matching the saved structure —
+    ``restore_pytree`` validates the checkpoint leaf-by-leaf against it."""
+    n, d = meta["n"], meta["d"]
+    sub_dims = tuple(int(s) for s in meta["sub_dims"])
+
+    def sds(shape, dtype=np.float32):
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+    transform = None
+    if meta["has_transform"]:
+        m = cfg.n_subspaces * cfg.subspace_dim
+        transform = SubspaceTransform(
+            mean=sds((d,)),
+            basis=sds((d, m)),
+            eigvals=sds((m,)),
+            n_subspaces=cfg.n_subspaces,
+            subspace_dim=cfg.subspace_dim,
+        )
+    subspaces = []
+    for s in sub_dims:
+        s1, s2 = split_halves(s)
+        subspaces.append(
+            IMISubspace(
+                centroids1=sds((cfg.sqrt_k, s1)),
+                centroids2=sds((cfg.sqrt_k, s2)),
+                assign1=sds((n,), np.int32),
+                assign2=sds((n,), np.int32),
+                cell_sizes=sds((cfg.sqrt_k, cfg.sqrt_k), np.int32),
+            )
+        )
+    return SCIndex(
+        transform=transform,
+        dim_perm=sds((d,), np.int32) if meta["has_dim_perm"] else None,
+        subspaces=tuple(subspaces),
+        data=sds((n, d)),
+        sub_dims=sub_dims,
+        data_norms=sds((n,)) if meta["has_data_norms"] else None,
+    )
+
+
+def load_index(path: str) -> tuple[SCIndex, SCConfig]:
+    """Load ``(index, cfg)`` saved by :func:`save_index`."""
+    try:
+        meta = read_manifest(path, INDEX_STEP).get("extra")
+    except FileNotFoundError:
+        raise FileNotFoundError(
+            f"{path}: not a saved ANN index (no step_{INDEX_STEP} checkpoint)"
+        ) from None
+    if not isinstance(meta, dict) or meta.get("format") != FORMAT:
+        raise ValueError(
+            f"{path}: checkpoint is not a saved ANN index "
+            f"(manifest extra format: {None if not isinstance(meta, dict) else meta.get('format')!r})"
+        )
+    if int(meta.get("version", -1)) > FORMAT_VERSION:
+        raise ValueError(
+            f"{path}: index format version {meta['version']} is newer "
+            f"than this code understands (<= {FORMAT_VERSION})"
+        )
+    known = {f.name for f in dataclasses.fields(SCConfig)}
+    unknown = set(meta["config"]) - known
+    if unknown:
+        raise ValueError(
+            f"{path}: config carries unknown SCConfig fields {sorted(unknown)}"
+        )
+    cfg = SCConfig(**meta["config"])
+    index = restore_pytree(_template_index(meta, cfg), path, INDEX_STEP)
+    return index, cfg

@@ -1,0 +1,51 @@
+"""Shared micro-batching helpers — the shape-bucket policy for every
+padded-execution path in the repo.
+
+Serving and ad-hoc search amortize XLA compilation by snapping
+variable-size work onto a small ladder of padded shape buckets: the ANN
+searchers (:mod:`repro.ann.searcher`) and the ANN serving engine bucket
+query-batch sizes; LM_PROMPT_BUCKETS is the ladder for prefill
+prompt-length bucketing (pending — prompt padding must first be proven safe
+for the SSM mixers, whose recurrent state sees pad tokens). One module owns
+the policy, so the engine backends and direct ``Searcher.search()`` calls
+share executables bucket-for-bucket.
+
+(Historic import path :mod:`repro.serving.batching` re-exports this
+module.)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# Prompt-length ladder for LM prefill (see module docstring).
+LM_PROMPT_BUCKETS = (16, 32, 64, 128, 256, 512, 1024)
+
+# Query-batch ladder for the ANN engine: starts at 1 so a lone request
+# still gets a tight executable instead of 16x padding waste.
+ANN_BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def bucket_size(n: int, buckets=LM_PROMPT_BUCKETS) -> int:
+    """Smallest ladder bucket >= n; past the top rung, round up to a
+    multiple of it (so arbitrarily large n still compiles O(1) shapes)."""
+    if n <= 0:
+        raise ValueError(f"bucket_size: n must be positive, got {n}")
+    for b in buckets:
+        if n <= b:
+            return b
+    top = buckets[-1]
+    return ((n + top - 1) // top) * top
+
+
+def pad_rows(x: np.ndarray, target: int) -> np.ndarray:
+    """Pad a (n, ...) array to (target, ...) rows by repeating the last row.
+
+    Repeating a real row (rather than zeros) keeps the pad lanes numerically
+    typical, so padded executions exercise the same code paths as real ones.
+    """
+    n = x.shape[0]
+    if n > target:
+        raise ValueError(f"pad_rows: {n} rows exceed target {target}")
+    if n == target:
+        return x
+    return np.concatenate([x, np.repeat(x[-1:], target - n, axis=0)], axis=0)

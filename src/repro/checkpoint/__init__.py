@@ -1,8 +1,15 @@
 from repro.checkpoint.checkpoint import (
     CheckpointManager,
     latest_step,
+    read_manifest,
     restore_pytree,
     save_pytree,
 )
 
-__all__ = ["CheckpointManager", "latest_step", "restore_pytree", "save_pytree"]
+__all__ = [
+    "CheckpointManager",
+    "latest_step",
+    "read_manifest",
+    "restore_pytree",
+    "save_pytree",
+]

@@ -17,6 +17,7 @@ here; the layout is forward-compatible).
 """
 from __future__ import annotations
 
+import glob
 import json
 import os
 import re
@@ -37,8 +38,13 @@ def _flatten_with_paths(tree):
     return flat, paths, treedef
 
 
-def save_pytree(tree: Any, directory: str, step: int) -> str:
-    """Atomically save a pytree as <directory>/step_<step>."""
+def save_pytree(tree: Any, directory: str, step: int, *, extra_meta: Any = None) -> str:
+    """Atomically save a pytree as <directory>/step_<step>.
+
+    ``extra_meta`` (JSON-serializable) rides in the manifest under
+    ``"extra"`` — it commits in the same atomic rename as the arrays, so
+    callers that pair a pytree with metadata (e.g. a saved ANN index and
+    its config) can never observe one without the other."""
     os.makedirs(directory, exist_ok=True)
     tmp = os.path.join(directory, f"tmp.{step}.{os.getpid()}")
     final = os.path.join(directory, f"step_{step}")
@@ -59,13 +65,26 @@ def save_pytree(tree: Any, directory: str, step: int) -> str:
         "dtypes": [str(np.asarray(x).dtype) for x in flat],
         "shapes": [list(np.asarray(x).shape) for x in flat],
     }
+    if extra_meta is not None:
+        manifest["extra"] = extra_meta
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    # Overwrite via rename-aside, not delete-then-rename: a crash between
+    # the two renames leaves the old checkpoint recoverable on disk
+    # (step_<n>.old.*) instead of destroyed mid-rmtree. Reachable when a
+    # caller re-saves a fixed step (e.g. a saved ANN index at step 0).
     if os.path.exists(final):
-        shutil.rmtree(final)
+        old = f"{final}.old.{os.getpid()}"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(final, old)
     os.rename(tmp, final)  # atomic on POSIX
+    # reap this save's aside copy AND any orphaned by crashed saves
+    # (other pids) — once `final` is committed they are all garbage
+    for stale in glob.glob(f"{final}.old.*"):
+        shutil.rmtree(stale, ignore_errors=True)
     return final
 
 
@@ -94,6 +113,12 @@ def restore_pytree(template: Any, directory: str, step: int) -> Any:
             raise ValueError(f"leaf {want_path}: shape {arr.shape} != {np.shape(leaf)}")
         out.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def read_manifest(directory: str, step: int) -> dict:
+    """The manifest of a completed checkpoint (incl. any ``extra`` meta)."""
+    with open(os.path.join(directory, f"step_{step}", "manifest.json")) as f:
+        return json.load(f)
 
 
 def latest_step(directory: str) -> int | None:

@@ -5,6 +5,9 @@ Public API:
   SCConfig + taco_config/suco_config/... — method configuration
   SCLinear, build_ivf/ivf_query     — baselines
   distributed_*                     — mesh-sharded build & query (shard_map)
+
+The lifecycle facade :mod:`repro.ann` (``AnnIndex.build/save/load/searcher/
+engine``) fronts these functions; prefer it for new code.
 """
 from repro.core.config import (
     ABLATIONS,

@@ -88,6 +88,22 @@ def index_pspecs(index: SCIndex, data_axes) -> SCIndex:
     )
 
 
+def per_shard_cap(cfg: SCConfig, n_local: int, k: int) -> int:
+    """Static per-shard candidate cap for the gather re-rank: the shard's
+    share of the global budget (4*beta*n_local, the same 4x headroom as
+    ``cfg.cap_for``) floored at the runtime k each shard needs to emit its
+    local top-k; an explicit ``candidate_cap`` is a per-shard cap (as in
+    the billion-scale dry-run config). One definition shared by the
+    shard_map query below and host-side stats consumers
+    (:class:`repro.ann.searcher.ShardedSearcher`)."""
+    base = (
+        cfg.candidate_cap
+        if cfg.candidate_cap is not None
+        else math.ceil(4 * cfg.beta * n_local)
+    )
+    return min(n_local, max(base, k))
+
+
 def _project_local(index: SCIndex, x: jax.Array) -> jax.Array:
     if index.transform is not None:
         return (x - index.transform.mean) @ index.transform.basis
@@ -198,18 +214,9 @@ def make_distributed_query_with_stats(
             truncated = jnp.zeros_like(count, dtype=bool)
         else:
             sc = sc_scores(d1s, d2s, a1s, a2s, taus)
-            # Per-shard static cap sized from the shard's SHARE of the global
-            # budget (4*beta*n_local, the same 4x headroom as cap_for), floored
-            # only at the runtime k each shard needs to emit its local top-k —
-            # NOT at cap_for's 4*cfg.k, which would scale total static re-rank
-            # work as S*4k in the many-shard regime. An explicit candidate_cap
-            # is a per-shard cap (as in the billion-scale dry-run config).
-            base = (
-                cfg.candidate_cap
-                if cfg.candidate_cap is not None
-                else math.ceil(4 * cfg.beta * n_local)
-            )
-            cap = min(n_local, max(base, k))
+            # NOT floored at cap_for's 4*cfg.k, which would scale total
+            # static re-rank work as S*4k in the many-shard regime.
+            cap = per_shard_cap(cfg, n_local, k)
             if cfg.selection == "query_aware":
                 # The budget is GLOBAL: psum the local SC-score histograms so
                 # every shard walks Algorithm 5 on the global histogram against

@@ -4,6 +4,11 @@ Because TaCo, SuCo and the paper's ablations differ only in which transform /
 activation / selection they plug in (see repro.core.config), this module
 implements the whole subspace-collision family; ``build``/``query`` read the
 choice from ``SCConfig``.
+
+This is the functional core; the lifecycle facade :class:`repro.ann.AnnIndex`
+(build / save / load / searcher / engine) fronts it and is the preferred
+entry point — the free functions here remain supported wrappers over the
+same machinery.
 """
 from __future__ import annotations
 

@@ -77,6 +77,11 @@ def main():
     ap.add_argument("--n", type=float, default=1e9)
     ap.add_argument("--d", type=int, default=128)
     ap.add_argument("--queries", type=int, default=32)
+    ap.add_argument("--rerank", choices=["gather", "masked_full", "auto"],
+                    default="gather",
+                    help="re-rank pipeline to lower/compile; 'auto' resolves "
+                         "to gather for the corpus-sharded query (billion-"
+                         "scale shards keep the gather path, see SCConfig)")
     ap.add_argument("--out", default="benchmarks/artifacts")
     args = ap.parse_args()
 
@@ -86,9 +91,11 @@ def main():
     n_dev = 512 if args.multi_pod else 256
     n = int(args.n) // n_dev * n_dev  # even corpus shards
     cfg = taco_config(n_subspaces=6, subspace_dim=8, n_clusters=256 * 256,
-                      alpha=0.01, beta=0.0005, k=50, candidate_cap=4096)
+                      alpha=0.01, beta=0.0005, k=50, candidate_cap=4096,
+                      rerank=args.rerank)
     results = {"kind": "ann", "mesh": "2x16x16" if args.multi_pod else "16x16",
-               "n": n, "d": args.d, "n_devices": n_dev}
+               "n": n, "d": args.d, "n_devices": n_dev,
+               "rerank": args.rerank}
 
     idx_sds = abstract_index(n, args.d, cfg, mesh, da)
     q_sds = jax.ShapeDtypeStruct(
@@ -142,6 +149,8 @@ def main():
     if args.out:
         os.makedirs(args.out, exist_ok=True)
         tag = f"ann_taco__n{n}__{results['mesh'].replace('x', '_')}"
+        if args.rerank != "gather":
+            tag += f"__{args.rerank}"
         with open(os.path.join(args.out, f"{tag}.json"), "w") as f:
             json.dump(results, f, indent=1)
 

@@ -1,18 +1,30 @@
-"""ANN serving driver: batched TaCo queries through AnnServingEngine.
+"""ANN serving driver: batched TaCo queries through the AnnIndex lifecycle.
 
-Builds a TaCo index over synthetic Gaussian-mixture data, then serves a
-stream of requests in waves of ``--pressure`` concurrent requests
-(mirroring launch/serve.py for the LM engine). ``--mixed`` sprinkles
+Builds (or loads) a TaCo index through the :class:`repro.ann.AnnIndex`
+facade, then serves a stream of requests in waves of ``--pressure``
+concurrent requests (mirroring launch/serve.py for the LM engine).
+
+Index lifecycle: ``--save-index DIR`` persists the built index (atomic
+npz + manifest via repro.checkpoint); ``--load-index DIR`` starts the
+server from a saved index *without rebuilding* — the paper's cheap-build
+story makes the build fast, but a production restart shouldn't pay even
+that. ``--rerank`` selects the re-rank pipeline (PR 3's streaming
+masked-full path vs the gather path); ``--result-cache N`` puts an N-entry
+LRU result cache in front of the batch path. ``--mixed`` sprinkles
 per-request k/beta overrides to exercise the grouping path. ``--shards N``
-serves through the corpus-sharded backend (``backend="sharded"``) on an
-N-way data mesh — on a CPU dev box the devices are forced via
+serves through the corpus-sharded backend on an N-way data mesh — on a CPU
+dev box the devices are forced via
 ``XLA_FLAGS=--xla_force_host_platform_device_count``, which must be set
 before jax initializes, so all jax-importing modules are imported inside
 ``main()`` after argument parsing.
 
-Example (CPU smoke):
+Examples (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve_ann --n 20000 --d 64 \
       --requests 64 --pressure 16 --shards 4
+  PYTHONPATH=src python -m repro.launch.serve_ann --n 20000 \
+      --save-index /tmp/taco_idx
+  PYTHONPATH=src python -m repro.launch.serve_ann \
+      --load-index /tmp/taco_idx --rerank masked_full
 """
 from __future__ import annotations
 
@@ -23,22 +35,41 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=20000)
     ap.add_argument("--d", type=int, default=64)
-    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--k", type=int, default=None,
+                    help="neighbors per request (default: 10 for a fresh "
+                         "build; the saved config's k for --load-index)")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--pressure", type=int, default=16,
                     help="concurrent requests per wave")
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--mixed", action="store_true",
                     help="vary k/beta across requests (exercises grouping)")
+    ap.add_argument("--rerank", choices=["gather", "masked_full", "auto"],
+                    default=None,
+                    help="re-rank pipeline: Alg. 5 gather, the streaming "
+                         "masked-full matmul, or auto (masked single-device, "
+                         "gather for sharded locals). Default: gather for a "
+                         "fresh build; the saved config for --load-index")
     ap.add_argument("--shards", type=int, default=0,
                     help="serve corpus-sharded over this many devices "
                          "(0 = single-device backend)")
+    ap.add_argument("--save-index", default=None, metavar="DIR",
+                    help="persist the built index+config under DIR")
+    ap.add_argument("--load-index", default=None, metavar="DIR",
+                    help="serve a previously saved index (skips the build; "
+                         "--n/--d are ignored, the saved config applies)")
+    ap.add_argument("--result-cache", type=int, default=0, metavar="N",
+                    help="LRU result cache entries in front of the batch "
+                         "path (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.pressure < 1:
         ap.error("--pressure must be >= 1")
     if args.shards < 0:
         ap.error("--shards must be >= 0")
+    if args.load_index and args.save_index:
+        ap.error("--save-index with --load-index would rewrite the same "
+                 "index; pick one")
     if args.shards > 1:
         # CPU dev: force host devices BEFORE any jax import/initialization
         # (hostdev is the one launch module that never imports jax).
@@ -48,18 +79,48 @@ def main(argv=None):
 
     import numpy as np
 
-    from repro.core import build, taco_config
+    from repro.ann import AnnIndex
+    from repro.core import taco_config
     from repro.data import even_shard_total, gmm_dataset, make_queries
-    from repro.serving import AnnRequest, AnnServingEngine
+    from repro.serving import AnnRequest
 
     held = max(args.requests, 1)
-    n = even_shard_total(args.n, held, args.shards)
-    data, held_out = make_queries(gmm_dataset(n, args.d, seed=args.seed), held)
-    cfg = taco_config(n_subspaces=6, subspace_dim=8, n_clusters=1024,
-                      alpha=0.05, beta=0.02, k=args.k)
-    print(f"building TaCo index: n={data.shape[0]} d={args.d} ...", flush=True)
-    index = build(data, cfg)
+    if args.load_index:
+        index = AnnIndex.load(args.load_index)
+        # only an EXPLICIT --rerank overrides the saved config
+        if args.rerank is not None and args.rerank != index.cfg.rerank:
+            index = index.replace_cfg(rerank=args.rerank)
+        print(f"loaded index from {args.load_index}: n={index.n} d={index.d} "
+              f"({index.index_bytes / 1e6:.1f} MB, rerank={index.cfg.rerank})",
+              flush=True)
+        # fresh query stream in the loaded index's space; an un-passed --k
+        # defers to the saved config, like the rest of the loaded cfg
+        held_out = gmm_dataset(held, index.d, seed=args.seed + 1)
+        if args.k is None:
+            args.k = index.cfg.k
+    else:
+        if args.k is None:
+            args.k = 10
+        n = even_shard_total(args.n, held, args.shards)
+        data, held_out = make_queries(gmm_dataset(n, args.d, seed=args.seed), held)
+        cfg = taco_config(n_subspaces=6, subspace_dim=8, n_clusters=1024,
+                          alpha=0.05, beta=0.02, k=args.k,
+                          rerank=args.rerank or "gather")
+        print(f"building TaCo index: n={data.shape[0]} d={args.d} ...", flush=True)
+        index = AnnIndex.build(data, cfg)
+        if args.save_index:
+            index.save(args.save_index)
+            print(f"saved index to {args.save_index} "
+                  f"({index.index_bytes / 1e6:.1f} MB index "
+                  f"+ {index.n * index.d * 4 / 1e6:.1f} MB data)", flush=True)
 
+    pool = held_out
+    if args.result_cache:
+        # with the cache on, make hit traffic real: halve the distinct-query
+        # pool so the measured stream itself repeats queries (the warm-up
+        # overlap is dropped below, so hits can only come from in-stream
+        # repeats — which is what the knob is meant to demonstrate)
+        pool = held_out[: max(1, (held + 1) // 2)]
     reqs = []
     for i in range(args.requests):
         k = args.k
@@ -67,16 +128,20 @@ def main(argv=None):
         if args.mixed and i % 3 == 1:
             k = max(1, args.k // 2)
         if args.mixed and i % 3 == 2:
-            beta = cfg.beta * 2
-        reqs.append(AnnRequest(query=held_out[i % held_out.shape[0]], k=k, beta=beta))
+            beta = index.cfg.beta * 2
+        reqs.append(AnnRequest(query=pool[i % pool.shape[0]], k=k, beta=beta))
 
-    backend = "sharded" if args.shards > 1 else "single"
-    engine = AnnServingEngine(index, cfg, max_batch=args.max_batch,
-                              backend=backend,
-                              shards=args.shards if args.shards > 1 else None)
-    # warm the steady-state executables, then serve in waves
+    placement = "sharded" if args.shards > 1 else "single"
+    engine = index.engine(placement,
+                          shards=args.shards if args.shards > 1 else None,
+                          max_batch=args.max_batch,
+                          result_cache_size=args.result_cache)
+    # warm the steady-state executables, then serve in waves; the warm-up
+    # queries overlap the measured stream, so drop their cached results
+    # to keep the printed latency/QPS about the backend, not cache replay
     engine.search(reqs[: min(args.pressure, len(reqs))])
     engine.reset_telemetry()
+    engine.clear_result_cache()
     results = []
     for lo in range(0, len(reqs), args.pressure):
         results.extend(engine.search(reqs[lo : lo + args.pressure]))
@@ -89,6 +154,10 @@ def main(argv=None):
           f"{t['queries_per_sec']:.0f} queries/s")
     print(f"  truncation rate {t['truncation_rate']:.3f}   "
           f"compiles {t['compiles_total']} {t['compiles_per_bucket']}")
+    if args.result_cache:
+        print(f"  result cache: {t['result_cache_hits']} hits / "
+              f"{t['result_cache_misses']} misses "
+              f"({t['result_cache_entries']} entries)")
     if t["shards"] > 1:
         mean_c = ", ".join(f"{c:.0f}" for c in t["shard_candidates_mean"])
         print(f"  per-shard candidates/query [{mean_c}]   "

@@ -10,10 +10,15 @@ Two engines share the micro-batching helpers in
     k-ANNS (paper Alg. 6): micro-batches a stream of :class:`AnnRequest`\\ s
     into padded shape buckets, jit-cached per ``(bucket, k, cfg)`` so
     steady-state query traffic never recompiles; per-request ``k``/``beta``
-    overrides; telemetry (p50/p99 latency, QPS, truncation rate, compile
-    counts, per-shard stats). Execution is pluggable via :class:`AnnBackend`:
+    /``rerank`` overrides; an optional LRU result cache; telemetry (p50/p99
+    latency, QPS, truncation rate, compile counts, cache hits/misses,
+    per-shard stats). Execution is pluggable via :class:`AnnBackend` —
     :class:`SingleDeviceAnnBackend` (default) or :class:`ShardedAnnBackend`
-    (corpus-sharded shard_map query over a device mesh).
+    (corpus-sharded shard_map query over a device mesh) — each a thin
+    adapter over a :class:`repro.ann.Searcher`, the layer that owns device
+    placement and the executable cache. The lifecycle facade
+    (:class:`repro.ann.AnnIndex` — build / save / load / searcher / engine)
+    is the preferred way to construct all of this.
 """
 from repro.serving.ann_engine import (
     AnnBackend,

@@ -9,32 +9,39 @@ Request path
 ------------
 ``submit()`` enqueues; ``drain()`` repeatedly
 
-  1. groups queued requests by their *effective* ``(k, cfg)`` — per-request
-     ``beta`` / ``rerank`` overrides become ``dataclasses.replace(cfg,
-     ...)``, so overrides (including switching between the gather and the
-     streaming masked-full re-rank pipelines) are first-class while
-     steady-state traffic with default parameters shares one executable;
-  2. micro-batches up to ``max_batch`` requests of a group and pads the
+  1. answers repeats from the optional LRU **result cache** keyed on the
+     quantized query bytes + effective ``(k, cfg)`` (``result_cache_size``;
+     hit/miss counts in ``telemetry()`` next to the compile counts);
+  2. groups the remaining requests by their *effective* ``(k, cfg)`` —
+     per-request ``beta`` / ``rerank`` overrides become
+     ``dataclasses.replace(cfg, ...)``, so overrides (including switching
+     between the gather and the streaming masked-full re-rank pipelines)
+     are first-class while steady-state traffic with default parameters
+     shares one executable;
+  3. micro-batches up to ``max_batch`` requests of a group and pads the
      query matrix up to a shape bucket (:mod:`repro.serving.batching` —
      every row of the TaCo query path is independent, so padding cannot
      change real-row results);
-  3. hands the padded batch to the engine's :class:`AnnBackend`, which owns
-     device placement and an LRU of executables keyed ``(bucket, k, cfg)``:
+  4. hands the padded batch to the engine's :class:`AnnBackend`, a thin
+     adapter over a :class:`repro.ann.Searcher` — the layer that owns
+     device placement and the LRU of executables keyed ``(bucket, k, cfg)``:
      steady-state traffic never recompiles, and the compile counter says so;
-  4. demuxes per-request ids/dists (+ the ``truncated`` stat) and records
+  5. demuxes per-request ids/dists (+ the ``truncated`` stat) and records
      telemetry: p50/p99 latency, queries/sec, candidate-truncation rate,
-     per-bucket compile counts, and — for sharded backends — per-shard
-     candidate/truncation stats and the all-gather combine size.
+     per-bucket compile counts, cache hits/misses, and — for sharded
+     backends — per-shard candidate/truncation stats and the all-gather
+     combine size.
 
 Backends
 --------
-:class:`SingleDeviceAnnBackend` jits :func:`repro.core.taco.query_with_stats`
-on the default device. :class:`ShardedAnnBackend` places the index
-corpus-sharded over a mesh (:func:`repro.core.distributed.index_pspecs`) and
-compiles :func:`repro.core.distributed.make_distributed_query_with_stats`
-executables — same queue, same jit-cache policy, per-shard telemetry.
-Future scaling layers (async queues, result caches — see ROADMAP) plug into
-the same protocol instead of into the engine's batch loop.
+Placement and compilation live in :mod:`repro.ann.searcher`;
+:class:`SingleDeviceAnnBackend` and :class:`ShardedAnnBackend` only adapt a
+:class:`~repro.ann.searcher.Searcher` to the engine's batch loop (their
+legacy constructor signatures build the matching searcher). Prefer
+constructing engines through :meth:`repro.ann.AnnIndex.engine`, which
+passes the searcher straight through. Future scaling layers (async queues,
+recall probes — see ROADMAP) plug into the same protocol instead of into
+the engine's batch loop.
 
 ``search()`` is the synchronous convenience wrapper (submit all, drain,
 return in request order).
@@ -42,16 +49,20 @@ return in request order).
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from collections import OrderedDict, deque
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.ann.searcher import (
+    AnnBatchResult,
+    Searcher,
+    SingleDeviceSearcher,
+    ShardedSearcher,
+    effective_query_params,
+)
 from repro.core.config import SCConfig
-from repro.core.taco import SCIndex, query_with_stats
+from repro.core.taco import SCIndex
 from repro.serving.batching import ANN_BATCH_BUCKETS, bucket_size, pad_rows
 
 
@@ -74,94 +85,71 @@ class AnnResult:
     truncated: bool  # candidate set hit a static cap for this query
     latency_s: float  # wall time of the batch that served this request
     shard_candidates: np.ndarray | None = None  # (S,) per-shard demand (sharded)
+    cached: bool = False  # served from the result cache, no device work
 
 
-@dataclasses.dataclass
-class AnnBatchResult:
-    """What a backend returns for one padded batch (one row per slot)."""
-
-    ids: np.ndarray  # (B, k) int32
-    dists: np.ndarray  # (B, k) float32
-    truncated: np.ndarray  # (B,) bool
-    shard_candidates: np.ndarray | None = None  # (B, S) int32
-    shard_truncated: np.ndarray | None = None  # (B, S) bool
+def _copied_arrays(r: AnnResult) -> dict:
+    """Fresh copies of an AnnResult's array fields (cache isolation)."""
+    return {
+        "ids": r.ids.copy(),
+        "dists": r.dists.copy(),
+        "shard_candidates": None
+        if r.shard_candidates is None
+        else r.shard_candidates.copy(),
+    }
 
 
 class AnnBackend:
-    """Executes padded query batches for :class:`AnnServingEngine`.
+    """Adapts a :class:`~repro.ann.searcher.Searcher` to the engine's
+    padded-batch loop.
 
-    The engine owns queueing, grouping, bucketing, demux and telemetry; a
-    backend owns device placement and the ``(bucket, k, cfg)`` -> executable
-    LRU cache. ``(bucket, k, cfg)`` is client-controlled via per-request
-    overrides, so without eviction a stream of novel beta values would grow
-    executable memory without bound.
+    The engine owns queueing, caching, grouping, bucketing, demux and
+    telemetry; the searcher owns device placement and the
+    ``(bucket, k, cfg)`` -> executable LRU. A backend is the shim between
+    them: ``run()`` forwards one padded batch to
+    :meth:`~repro.ann.searcher.Searcher.run_padded`.
     """
 
-    #: data shards the corpus is split over (1 = no sharding)
-    shards: int = 1
-
-    def __init__(self, index: SCIndex, *, max_cached_fns: int = 64):
+    def __init__(self, index: SCIndex, *, searcher: Searcher):
         self.index = index
-        self.max_cached_fns = int(max_cached_fns)
-        self._fns: OrderedDict = OrderedDict()  # (bucket, k, cfg) -> callable
-        self.compile_counts: dict = {}  # same key -> #times compiled
+        self.searcher = searcher
 
-    def _fn(self, bucket: int, k: int, cfg: SCConfig):
-        key = (bucket, k, cfg)
-        if key not in self._fns:
-            self._fns[key] = self._compile(bucket, k, cfg)
-            self.compile_counts[key] = self.compile_counts.get(key, 0) + 1
-            while len(self._fns) > self.max_cached_fns:
-                self._fns.popitem(last=False)
-        else:
-            self._fns.move_to_end(key)
-        return self._fns[key]
+    @property
+    def shards(self) -> int:
+        """Data shards the corpus is split over (1 = no sharding)."""
+        return self.searcher.shards
 
-    def _compile(self, bucket: int, k: int, cfg: SCConfig):
-        """Build the executable for one ``(bucket, k, cfg)`` key."""
-        raise NotImplementedError
+    # The executable cache lives on the searcher; these views keep the
+    # engine's (and older callers') telemetry surface unchanged.
+    @property
+    def _fns(self) -> OrderedDict:
+        return self.searcher._fns
+
+    @property
+    def compile_counts(self) -> dict:
+        return self.searcher.compile_counts
 
     def run(self, bucket: int, k: int, cfg: SCConfig, queries: np.ndarray) -> AnnBatchResult:
         """Execute one padded ``(bucket, d)`` query batch synchronously."""
-        raise NotImplementedError
+        return self.searcher.run_padded(bucket, k, cfg, queries)
 
 
 class SingleDeviceAnnBackend(AnnBackend):
-    """One-device execution: jitted :func:`query_with_stats` closures."""
+    """One-device execution (:class:`SingleDeviceSearcher` adapter)."""
 
-    def _compile(self, bucket: int, k: int, cfg: SCConfig):
-        index = self.index
-
-        @jax.jit
-        def fn(queries):
-            ids, dists, stats = query_with_stats(index, queries, cfg, k=k)
-            # only the O(Q) stats leave the device; the (Q, n) SC matrix
-            # stays internal to the executable
-            return ids, dists, stats["truncated"]
-
-        return fn
-
-    def run(self, bucket: int, k: int, cfg: SCConfig, queries: np.ndarray) -> AnnBatchResult:
-        ids, dists, truncated = jax.block_until_ready(
-            self._fn(bucket, k, cfg)(jnp.asarray(queries))
-        )
-        return AnnBatchResult(
-            ids=np.asarray(ids),
-            dists=np.asarray(dists),
-            truncated=np.asarray(truncated),
-        )
+    def __init__(
+        self, index: SCIndex, *, max_cached_fns: int = 64, searcher=None
+    ):
+        if searcher is None:
+            searcher = SingleDeviceSearcher(index, max_cached_fns=max_cached_fns)
+        super().__init__(index, searcher=searcher)
 
 
 class ShardedAnnBackend(AnnBackend):
-    """Corpus-sharded execution through :mod:`repro.core.distributed`.
-
-    The built index is placed ONCE, sharded over the mesh's data axes per
-    :func:`index_pspecs`; each ``(bucket, k, cfg)`` key compiles a
-    :func:`make_distributed_query_with_stats` executable. Queries are
-    replicated by default (``query_axes=()``) so every bucket size runs on
-    every mesh, and the combine all-gather moves only (Q, shards*k)
-    id/dist pairs per batch.
-    """
+    """Corpus-sharded execution (:class:`ShardedSearcher` adapter): the
+    index is placed ONCE over the mesh's data axes; every ``(bucket, k,
+    cfg)`` key compiles a shard_map query executable — same queue, same
+    jit-cache policy, per-shard telemetry."""
 
     def __init__(
         self,
@@ -172,69 +160,43 @@ class ShardedAnnBackend(AnnBackend):
         data_axes=None,
         query_axes=(),
         max_cached_fns: int = 64,
+        searcher=None,
     ):
-        super().__init__(index, max_cached_fns=max_cached_fns)
-        from jax.sharding import NamedSharding
-
-        from repro.compat import make_mesh
-        from repro.core.distributed import index_pspecs
-
-        if mesh is None:
-            n_dev = len(jax.devices())
-            shards = n_dev if shards is None else int(shards)
-            if not 1 <= shards <= n_dev:
-                raise ValueError(f"shards={shards} out of range [1, {n_dev} devices]")
-            mesh = make_mesh((shards,), ("data",))
-            data_axes = ("data",)
-        elif shards is not None:
-            raise ValueError(
-                "pass either mesh or shards, not both — with an explicit "
-                "mesh the shard count is the product of its data axes"
+        if searcher is None:
+            searcher = ShardedSearcher(
+                index,
+                mesh=mesh,
+                shards=shards,
+                data_axes=data_axes,
+                query_axes=query_axes,
+                max_cached_fns=max_cached_fns,
             )
-        self.mesh = mesh
-        self.data_axes = tuple(data_axes if data_axes is not None else ("data",))
-        self.query_axes = tuple(query_axes)
-        self.shards = math.prod(mesh.shape[ax] for ax in self.data_axes)
-        if index.n % self.shards:
-            raise ValueError(
-                f"corpus size {index.n} not divisible by {self.shards} shards"
-            )
-        specs = index_pspecs(index, self.data_axes)
-        self._sharded_index = jax.tree.map(
-            lambda x, s: jax.device_put(x, NamedSharding(mesh, s)) if s is not None else x,
-            index,
-            specs,
-            is_leaf=lambda x: x is None,
-        )
+        super().__init__(index, searcher=searcher)
 
-    def _compile(self, bucket: int, k: int, cfg: SCConfig):
-        from repro.core.distributed import make_distributed_query_with_stats
+    @property
+    def mesh(self):
+        return self.searcher.mesh
 
-        return make_distributed_query_with_stats(
-            self.mesh,
-            cfg,
-            self.index,
-            self.index.n,
-            data_axes=self.data_axes,
-            query_axes=self.query_axes,
-            k=k,
-        )
+    @property
+    def data_axes(self):
+        return self.searcher.data_axes
 
-    def run(self, bucket: int, k: int, cfg: SCConfig, queries: np.ndarray) -> AnnBatchResult:
-        ids, dists, stats = jax.block_until_ready(
-            self._fn(bucket, k, cfg)(self._sharded_index, jnp.asarray(queries))
-        )
-        shard_truncated = np.asarray(stats["shard_truncated"])
-        return AnnBatchResult(
-            ids=np.asarray(ids),
-            dists=np.asarray(dists),
-            truncated=shard_truncated.any(axis=1),
-            shard_candidates=np.asarray(stats["shard_candidates"]),
-            shard_truncated=shard_truncated,
-        )
+    @property
+    def query_axes(self):
+        return self.searcher.query_axes
 
 
 def _make_backend(backend, index, *, mesh, shards, max_cached_fns) -> AnnBackend:
+    if isinstance(backend, Searcher):
+        if mesh is not None or shards is not None or max_cached_fns is not None:
+            raise ValueError(
+                "a prebuilt Searcher already owns its placement and "
+                "executable cache; don't also pass mesh/shards/"
+                "max_cached_fns (set them when building the searcher)"
+            )
+        cls = ShardedAnnBackend if isinstance(backend, ShardedSearcher) else SingleDeviceAnnBackend
+        return cls(backend.index, searcher=backend)
+    max_cached_fns = 64 if max_cached_fns is None else int(max_cached_fns)
     if backend == "sharded":
         return ShardedAnnBackend(
             index, mesh=mesh, shards=shards, max_cached_fns=max_cached_fns
@@ -263,10 +225,11 @@ class AnnServingEngine:
         *,
         max_batch: int = 64,
         buckets=ANN_BATCH_BUCKETS,
-        max_cached_fns: int = 64,
-        backend: str | AnnBackend = "single",
+        max_cached_fns: int | None = None,  # executable LRU size; default 64
+        backend: str | AnnBackend | Searcher = "single",
         mesh=None,
         shards: int | None = None,
+        result_cache_size: int = 0,
     ):
         self.index = index
         self.cfg = cfg
@@ -281,14 +244,29 @@ class AnnServingEngine:
         self._next_id = 0
         self._latencies: list[float] = []
         self._served = 0
+        self._executed = 0  # requests that reached the backend (not cache hits)
         self._batches = 0
         self._truncated = 0
         self._busy_s = 0.0
         self._combine_pairs = 0
         self._shard_candidates = np.zeros(self.backend.shards, np.int64)
         self._shard_truncated = np.zeros(self.backend.shards, np.int64)
+        # Result cache (ROADMAP): LRU on (quantized query bytes, k, cfg) in
+        # front of the batch path. 0 disables. Queries are quantized to
+        # float16 for the key, so "the same vector again" hits even across
+        # float32 noise below half precision — by construction a hit may
+        # serve a result computed for a query within f16 rounding.
+        self.result_cache_size = int(result_cache_size)
+        self._result_cache: OrderedDict = OrderedDict()  # key -> AnnResult
+        self._cache_hits = 0
+        self._cache_misses = 0
 
-    # Back-compat views of the jit cache, which now lives on the backend.
+    @property
+    def searcher(self) -> Searcher:
+        """The placement + executable-cache layer this engine serves from."""
+        return self.backend.searcher
+
+    # Back-compat views of the jit cache, which lives on the searcher.
     @property
     def _fns(self) -> OrderedDict:
         return self.backend._fns
@@ -329,6 +307,8 @@ class AnnServingEngine:
     def drain(self) -> dict[int, AnnResult]:
         """Serve everything queued; returns {request_id: AnnResult}."""
         out: dict[int, AnnResult] = {}
+        if self.result_cache_size > 0:
+            self._serve_from_cache(out)
         while self._queue:
             group_key = self._effective(self._queue[0][1])
             batch: list = []
@@ -350,15 +330,62 @@ class AnnServingEngine:
         results = self.drain()
         return [results[rid] for rid in rids]
 
+    # ------------------------------------------------------ result cache --
+    def _cache_key(self, req: AnnRequest, effective=None):
+        k, cfg = self._effective(req) if effective is None else effective
+        # Scale-normalized float16 quantization: dividing by max|q| before
+        # the f16 cast keeps the key collision-free for large-magnitude
+        # queries (a plain f16 cast saturates >65504 coordinates to inf,
+        # colliding unrelated queries) while near-duplicate queries still
+        # share a key — both direction and f16-rounded scale must match.
+        # (A scale beyond f16 range saturates to inf: only same-direction
+        # queries that BOTH exceed it can still collide.)
+        q = np.asarray(req.query, np.float32)
+        scale = float(np.max(np.abs(q))) or 1.0
+        with np.errstate(over="ignore"):
+            q16 = (q / scale).astype(np.float16)
+            scale16 = np.float16(scale)
+        return (q16.tobytes(), scale16.tobytes(), k, cfg)
+
+    def _serve_from_cache(self, out: dict) -> None:
+        still: deque = deque()
+        for rid, req in self._queue:
+            key = self._cache_key(req, self._effective(req))
+            hit = self._result_cache.get(key)
+            if hit is None:
+                self._cache_misses += 1
+                still.append((rid, req))
+                continue
+            self._result_cache.move_to_end(key)
+            self._cache_hits += 1
+            out[rid] = dataclasses.replace(hit, latency_s=0.0, cached=True,
+                                           **_copied_arrays(hit))
+            self._latencies.append(0.0)
+            self._truncated += int(hit.truncated)
+            self._served += 1
+        self._queue = still
+
+    def _cache_store(self, req: AnnRequest, effective, result: AnnResult) -> None:
+        # store an isolated copy: `result` shares its arrays with the
+        # response just handed to the requester, and cached entries outlive
+        # that response — a caller mutating its result must not poison the
+        # cache (hits hand out copies for the same reason)
+        key = self._cache_key(req, effective)
+        self._result_cache[key] = dataclasses.replace(
+            result, **_copied_arrays(result)
+        )
+        self._result_cache.move_to_end(key)
+        while len(self._result_cache) > self.result_cache_size:
+            self._result_cache.popitem(last=False)
+
+    def clear_result_cache(self) -> None:
+        """Drop all cached results (e.g. after a warm-up pass whose queries
+        overlap the traffic you are about to measure)."""
+        self._result_cache.clear()
+
     # ------------------------------------------------------ compiled path --
     def _effective(self, req: AnnRequest) -> tuple[int, SCConfig]:
-        k = self.cfg.k if req.k is None else int(req.k)
-        cfg = self.cfg
-        if req.beta is not None and req.beta != cfg.beta:
-            cfg = dataclasses.replace(cfg, beta=float(req.beta))
-        if req.rerank is not None and req.rerank != cfg.rerank:
-            cfg = dataclasses.replace(cfg, rerank=req.rerank)
-        return k, cfg
+        return effective_query_params(self.cfg, req.k, req.beta, req.rerank)
 
     def _run_batch(self, group_key, batch, out: dict) -> None:
         k, cfg = group_key
@@ -369,7 +396,7 @@ class AnnServingEngine:
         dt = time.perf_counter() - t0
         self._batches += 1
         self._busy_s += dt
-        for i, (rid, _req) in enumerate(batch):
+        for i, (rid, req) in enumerate(batch):
             out[rid] = AnnResult(
                 ids=res.ids[i],
                 dists=res.dists[i],
@@ -379,9 +406,12 @@ class AnnServingEngine:
                 if res.shard_candidates is None
                 else res.shard_candidates[i],
             )
+            if self.result_cache_size > 0:
+                self._cache_store(req, group_key, out[rid])
             self._latencies.append(dt)
             self._truncated += int(res.truncated[i])
             self._served += 1
+            self._executed += 1
             self._combine_pairs += self.backend.shards * k
             if res.shard_candidates is not None:
                 self._shard_candidates += res.shard_candidates[i]
@@ -390,15 +420,19 @@ class AnnServingEngine:
     # --------------------------------------------------------- telemetry --
     def reset_telemetry(self) -> None:
         """Zero the traffic counters (e.g. after warm-up); the jit cache and
-        its compile counts describe the engine's lifetime and are kept."""
+        its compile counts describe the engine's lifetime and are kept, as
+        are the result cache's entries (its hit/miss counters reset)."""
         self._latencies = []
         self._served = 0
+        self._executed = 0
         self._batches = 0
         self._truncated = 0
         self._busy_s = 0.0
         self._combine_pairs = 0
         self._shard_candidates = np.zeros(self.backend.shards, np.int64)
         self._shard_truncated = np.zeros(self.backend.shards, np.int64)
+        self._cache_hits = 0
+        self._cache_misses = 0
 
     def telemetry(self) -> dict:
         lat = np.asarray(self._latencies, np.float64)
@@ -416,12 +450,17 @@ class AnnServingEngine:
             "truncation_rate": self._truncated / self._served if self._served else 0.0,
             "compiles_total": sum(self.compile_counts.values()),
             "compiles_per_bucket": per_bucket,
+            "result_cache_hits": self._cache_hits,
+            "result_cache_misses": self._cache_misses,
+            "result_cache_entries": len(self._result_cache),
         }
         if self.backend.shards > 1:
-            served = max(self._served, 1)
             # per-shard candidate demand + truncation, and the size of the
-            # all-gather combine (id/dist pairs moved per query: shards*k)
-            out["shard_candidates_mean"] = (self._shard_candidates / served).tolist()
-            out["shard_truncation_rate"] = (self._shard_truncated / served).tolist()
-            out["combine_pairs_per_query"] = self._combine_pairs / served
+            # all-gather combine (id/dist pairs moved per query: shards*k).
+            # Means are per EXECUTED query — result-cache hits never touch
+            # the backend, so counting them would understate shard load.
+            executed = max(self._executed, 1)
+            out["shard_candidates_mean"] = (self._shard_candidates / executed).tolist()
+            out["shard_truncation_rate"] = (self._shard_truncated / executed).tolist()
+            out["combine_pairs_per_query"] = self._combine_pairs / executed
         return out

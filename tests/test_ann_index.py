@@ -1,0 +1,324 @@
+"""AnnIndex lifecycle: facade parity with the legacy free functions,
+save -> load bitwise roundtrip (single and sharded placement), legacy
+``data_norms=None`` indexes, searcher executable-cache behavior, and the
+engine result cache."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.ann import AnnIndex, load_index, save_index
+from repro.ann.searcher import SingleDeviceSearcher
+from repro.core import build, query_with_stats, suco_config, taco_config
+from repro.serving import AnnRequest
+
+
+@pytest.fixture(scope="module")
+def ann_index(small_dataset):
+    data, queries, _gt_i, _gt_d = small_dataset
+    cfg = taco_config(n_subspaces=4, subspace_dim=8, n_clusters=256,
+                      alpha=0.05, beta=0.02, k=10)
+    return AnnIndex.build(data, cfg), np.asarray(queries)
+
+
+# ------------------------------------------------------------------ facade --
+def test_build_matches_free_function(ann_index, small_dataset):
+    """AnnIndex.build is the same Alg. 1-3 build as repro.core.build."""
+    data, _queries, _gt_i, _gt_d = small_dataset
+    import jax
+
+    index, _ = ann_index
+    legacy = build(data, index.cfg)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(index.sc_index),
+        jax.tree_util.tree_leaves(legacy),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert index.n == legacy.n
+    assert index.index_bytes == legacy.index_bytes
+
+
+def test_searcher_matches_engine_and_stats(ann_index):
+    """searcher.search == engine path == jitted query_with_stats, and the
+    uniform stats carry truncated + candidate_count."""
+    index, queries = ann_index
+    searcher = index.searcher("single")
+    ids, dists, stats = searcher.search_with_stats(queries)
+    assert set(stats) >= {"truncated", "candidate_count"}
+    assert stats["truncated"].shape == (queries.shape[0],)
+
+    engine = index.engine(max_batch=queries.shape[0])
+    results = engine.search([AnnRequest(query=q) for q in queries])
+    np.testing.assert_array_equal(np.stack([r.ids for r in results]), ids)
+    np.testing.assert_array_equal(np.stack([r.dists for r in results]), dists)
+
+    # per-call overrides mirror the free-function k override
+    ids5, _ = searcher.search(queries[:4], k=5)
+    assert ids5.shape == (4, 5)
+
+    # single-vector convenience: (d,) in, (k,) out
+    one_ids, one_d, one_stats = searcher.search_with_stats(queries[0])
+    assert one_ids.shape == (index.cfg.k,)
+    np.testing.assert_array_equal(one_ids, ids[0])
+    assert np.isscalar(bool(one_stats["truncated"])) or one_stats["truncated"].shape == ()
+
+
+def test_searcher_owns_executable_cache(ann_index):
+    index, queries = ann_index
+    searcher = index.searcher("single")
+    searcher.search(queries[:8])
+    searcher.search(queries[8:16])  # same bucket -> cache hit
+    assert sum(searcher.compile_counts.values()) == 1
+    searcher.search(queries[:8], k=5)  # new k -> one more executable
+    assert sum(searcher.compile_counts.values()) == 2
+    # the engine shares its searcher's cache (backends are thin adapters)
+    engine = index.engine(max_batch=8)
+    engine.search([AnnRequest(query=q) for q in queries[:8]])
+    assert engine.compile_counts is engine.searcher.compile_counts
+
+
+def test_searcher_rejects_misplaced_kwargs(ann_index):
+    index, _queries = ann_index
+    with pytest.raises(ValueError):
+        index.searcher("single", shards=4)
+    with pytest.raises(ValueError):
+        index.searcher("bogus")
+    # searcher without a default cfg refuses high-level search
+    s = SingleDeviceSearcher(index.sc_index)
+    with pytest.raises(ValueError):
+        s.search(np.zeros((1, index.d), np.float32))
+
+
+# ------------------------------------------------------------- persistence --
+def test_save_load_roundtrip_bitwise(ann_index, tmp_path):
+    index, queries = ann_index
+    path = str(tmp_path / "idx")
+    index.save(path)
+    loaded = AnnIndex.load(path)
+    assert loaded.cfg == index.cfg
+    assert loaded.index_bytes == index.index_bytes
+
+    ids, dists = index.search(queries)
+    lids, ldists = loaded.search(queries)
+    np.testing.assert_array_equal(lids, ids)
+    np.testing.assert_array_equal(ldists, dists)  # bitwise
+
+    # every SCIndex leaf round-trips bitwise too
+    import jax
+
+    for a, b in zip(
+        jax.tree_util.tree_leaves(index.sc_index),
+        jax.tree_util.tree_leaves(loaded.sc_index),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_save_load_suco_dim_perm(ann_index, small_dataset, tmp_path):
+    """SuCo-style index (dim_perm, no transform) round-trips."""
+    data, queries, _gt_i, _gt_d = small_dataset
+    cfg = suco_config(n_subspaces=4, subspace_dim=8, n_clusters=256, k=10)
+    index = AnnIndex.build(data, cfg)
+    path = str(tmp_path / "suco")
+    index.save(path)
+    loaded = AnnIndex.load(path)
+    assert loaded.sc_index.transform is None
+    assert loaded.sc_index.dim_perm is not None
+    ids, dists = index.search(np.asarray(queries))
+    lids, ldists = loaded.search(np.asarray(queries))
+    np.testing.assert_array_equal(lids, ids)
+    np.testing.assert_array_equal(ldists, dists)
+
+
+def test_legacy_index_without_data_norms(ann_index, tmp_path):
+    """An index saved without the data_norms field (pre-PR3 style) loads
+    with data_norms=None and queries through the fallback norm path."""
+    index, queries = ann_index
+    legacy_sc = dataclasses.replace(index.sc_index, data_norms=None)
+    path = str(tmp_path / "legacy")
+    save_index(legacy_sc, index.cfg, path)
+    loaded_sc, loaded_cfg = load_index(path)
+    assert loaded_sc.data_norms is None
+
+    want_ids, want_dists, _ = query_with_stats(legacy_sc, queries, index.cfg)
+    got_ids, got_dists, _ = query_with_stats(loaded_sc, queries, loaded_cfg)
+    np.testing.assert_array_equal(np.asarray(got_ids), np.asarray(want_ids))
+    np.testing.assert_array_equal(np.asarray(got_dists), np.asarray(want_dists))
+
+
+def test_load_rejects_non_index_dir(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        AnnIndex.load(str(tmp_path / "nope"))
+
+
+def test_load_rejects_unknown_config_field(ann_index, tmp_path):
+    """A file from a future SCConfig must fail loudly, not drop fields.
+    (The load-bearing meta lives in the checkpoint manifest's "extra" —
+    ann_index.json is only a human-readable mirror.)"""
+    import json
+
+    index, _queries = ann_index
+    path = str(tmp_path / "future")
+    index.save(path)
+    manifest_path = os.path.join(path, "step_0", "manifest.json")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    manifest["extra"]["config"]["warp_drive"] = True
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match="warp_drive"):
+        AnnIndex.load(path)
+
+
+def test_save_is_atomic_config_and_arrays_commit_together(ann_index, tmp_path):
+    """Config + arrays land in ONE atomic rename (manifest 'extra'): a
+    crashed re-save can never pair a new config with old arrays. Simulate
+    the old failure mode — metadata updated, arrays not — and check the
+    load still returns the committed (old) pair."""
+    index, queries = ann_index
+    path = str(tmp_path / "idx")
+    index.save(path)
+    # a crashed re-save would leave ann_index.json (the mirror) rewritten
+    # while step_0 still holds the old commit; the mirror must not matter
+    with open(os.path.join(path, "ann_index.json"), "w") as f:
+        f.write("{\"format\": \"corrupted-mirror\"}")
+    loaded = AnnIndex.load(path)
+    assert loaded.cfg == index.cfg
+    lids, _ = loaded.search(queries[:4])
+    ids, _ = index.search(queries[:4])
+    np.testing.assert_array_equal(lids, ids)
+
+
+# ------------------------------------------------------------ result cache --
+def test_engine_result_cache_hits_and_parity(ann_index):
+    index, queries = ann_index
+    engine = index.engine(max_batch=8, result_cache_size=64)
+    r1 = engine.search([AnnRequest(query=q) for q in queries[:8]])
+    r2 = engine.search([AnnRequest(query=q) for q in queries[:8]])
+    t = engine.telemetry()
+    assert t["result_cache_misses"] == 8
+    assert t["result_cache_hits"] == 8
+    assert t["batches"] == 1  # the second wave never reached the backend
+    for a, b in zip(r1, r2):
+        assert not a.cached and b.cached
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.dists, b.dists)
+    # a different k is a different cache key
+    engine.search([AnnRequest(query=queries[0], k=5)])
+    assert engine.telemetry()["result_cache_misses"] == 9
+
+
+def test_engine_result_cache_lru_eviction(ann_index):
+    index, queries = ann_index
+    engine = index.engine(max_batch=4, result_cache_size=4)
+    engine.search([AnnRequest(query=q) for q in queries[:8]])
+    assert engine.telemetry()["result_cache_entries"] == 4
+    # oldest four evicted -> these miss again
+    engine.search([AnnRequest(query=q) for q in queries[:4]])
+    t = engine.telemetry()
+    assert t["result_cache_hits"] == 0
+    assert t["result_cache_misses"] == 12
+
+
+def test_engine_result_cache_isolated_from_caller_mutation(ann_index):
+    """Neither the original requester nor a hit consumer can poison the
+    cache by mutating the arrays they were handed."""
+    index, queries = ann_index
+    engine = index.engine(max_batch=4, result_cache_size=8)
+    first = engine.search([AnnRequest(query=queries[0])])[0]
+    want = first.ids.copy()
+    if first.ids.flags.writeable:  # jax-backed responses are read-only views
+        first.ids[:] = -7  # requester scribbles on its response
+    hit = engine.search([AnnRequest(query=queries[0])])[0]
+    assert hit.cached
+    np.testing.assert_array_equal(hit.ids, want)
+    hit.ids[:] = -9  # hit consumer scribbles on its (writable) copy
+    hit2 = engine.search([AnnRequest(query=queries[0])])[0]
+    np.testing.assert_array_equal(hit2.ids, want)
+
+
+def test_engine_result_cache_large_queries_no_collision(ann_index):
+    """Scale-normalized key quantization: large-magnitude queries must not
+    saturate to identical f16-inf keys, while float32-noise duplicates of
+    the same query still hit."""
+    index, queries = ann_index
+    engine = index.engine(max_batch=2, result_cache_size=8)
+    qa = np.asarray(queries[0], np.float32) * 1e6  # coordinates >> f16 max
+    qb = np.asarray(queries[1], np.float32) * 1e6
+    engine.search([AnnRequest(query=qa)])
+    rb = engine.search([AnnRequest(query=qb)])[0]
+    assert not rb.cached  # distinct huge queries: distinct keys
+    again = engine.search([AnnRequest(query=qa * (1.0 + 1e-7))])[0]
+    assert again.cached  # sub-f16 noise on the same query still hits
+
+
+def test_engine_result_cache_disabled_by_default(ann_index):
+    index, queries = ann_index
+    engine = index.engine(max_batch=8)
+    engine.search([AnnRequest(query=q) for q in queries[:8]])
+    engine.search([AnnRequest(query=q) for q in queries[:8]])
+    t = engine.telemetry()
+    assert t["batches"] == 2  # no cache: both waves hit the backend
+    assert t["result_cache_hits"] == 0 and t["result_cache_misses"] == 0
+
+
+# ------------------------------------------------- sharded placement (slow) --
+SHARDED_SCRIPT = r"""
+import numpy as np, jax, tempfile
+from repro.ann import AnnIndex
+from repro.core import taco_config
+from repro.data import gmm_dataset, make_queries
+
+assert len(jax.devices()) == 4, jax.devices()
+data0 = gmm_dataset(8192, 64, seed=0)
+data, queries = make_queries(data0, 16)
+cfg = taco_config(n_subspaces=4, subspace_dim=8, n_clusters=256,
+                  alpha=0.05, beta=0.02, k=10)
+index = AnnIndex.build(data, cfg)
+ids_ref, d_ref = index.search(queries)
+
+with tempfile.TemporaryDirectory() as td:
+    index.save(td + "/idx")
+    loaded = AnnIndex.load(td + "/idx")
+
+# loaded + sharded searcher == in-memory single-device, bitwise
+for placement, kw in [("single", {}), ("sharded", dict(shards=4)),
+                      ("auto", {})]:
+    s = loaded.searcher(placement, **kw)
+    ids, dists, stats = s.search_with_stats(queries)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids_ref))
+    np.testing.assert_array_equal(np.asarray(dists), np.asarray(d_ref))
+    if s.shards > 1:
+        assert stats["shard_candidates"].shape == (16, s.shards)
+        assert not stats["shard_truncated"].any()
+# 4 devices + 8192 % 4 == 0 -> auto placed sharded
+assert loaded.searcher("auto").shards == 4
+
+# facade engine over the sharded searcher reuses its placement
+eng = loaded.engine("sharded", shards=4, max_batch=16)
+from repro.serving import AnnRequest
+res = eng.search([AnnRequest(query=q) for q in queries])
+np.testing.assert_array_equal(np.stack([r.ids for r in res]), np.asarray(ids_ref))
+assert eng.telemetry()["backend"] == "ShardedAnnBackend"
+assert eng.telemetry()["shards"] == 4
+print("ANN_INDEX_SHARDED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_save_load_sharded_parity():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "") + os.pathsep + "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", SHARDED_SCRIPT],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ANN_INDEX_SHARDED_OK" in proc.stdout
