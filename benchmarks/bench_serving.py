@@ -105,7 +105,7 @@ def stage_timings(index, cfg, queries):
 
 
 def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
-          json_path=None):
+          churn=0, json_path=None):
     import dataclasses
 
     import jax
@@ -170,6 +170,31 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
         rows.append((f"engine-{shards}shard", sharded_s))
         sharded_t = sharded_engine.telemetry()
 
+    # --- churn: mixed query/insert/delete workload through a mutable
+    # index (delta scan + tombstone mask + policy-driven compaction) ------
+    churn_t = None
+    if churn > 0:
+        from repro.ann import CompactionPolicy
+        from repro.ann.mutable import churn_wave
+
+        mutable = ann.mutable(
+            policy=CompactionPolicy(max_delta_rows=max(8, 4 * churn))
+        )
+        churn_engine = mutable.engine(max_batch=max(pressure, 1))
+        churn_engine.search([AnnRequest(query=q) for q in qs[:pressure]])
+        churn_engine.reset_telemetry()
+        churn_rng = np.random.default_rng(seed + 7)
+        live_new: list = []
+        t0 = time.perf_counter()
+        for lo in range(0, requests, pressure):
+            churn_wave(mutable, churn_rng, live_new, churn, engine=churn_engine)
+            churn_engine.search(
+                [AnnRequest(query=q) for q in qs[lo : lo + pressure]]
+            )
+        churn_s = time.perf_counter() - t0
+        rows.append((f"engine-churn{churn}", churn_s))
+        churn_t = churn_engine.telemetry()
+
     stages = stage_timings(index, cfg, qs[:pressure])
     t = engine.telemetry()
     mt = masked_engine.telemetry()
@@ -189,6 +214,13 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
               f"combine {sharded_t['combine_pairs_per_query']:.0f} pairs/query  "
               f"per-shard candidates/query "
               f"{[round(c) for c in sharded_t['shard_candidates_mean']]}")
+    if churn_t is not None:
+        ms = churn_t["mutable"]
+        print(f"  churn p50 {churn_t['latency_p50_s'] * 1e3:.2f} ms  "
+              f"{ms['compactions']} compactions  "
+              f"{churn_t['index_swaps']} swaps  "
+              f"{ms['n_live']} live ({ms['n_delta_live']} delta, "
+              f"{ms['n_tombstones']} tombstones)")
     print(f"  speedup vs adhoc : {adhoc_s / engine_s:7.2f}x")
     print(f"  speedup vs cached: {cached_s / engine_s:7.2f}x")
     print(f"  masked vs gather : {engine_s / masked_s:7.2f}x")
@@ -217,6 +249,14 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
                 "combine_pairs_per_query": sharded_t["combine_pairs_per_query"],
                 "shard_candidates_mean": sharded_t["shard_candidates_mean"],
             }
+        if churn_t is not None:
+            payload["churn"] = {
+                "per_wave_inserts": churn,
+                "latency_p50_s": churn_t["latency_p50_s"],
+                "compactions": churn_t["mutable"]["compactions"],
+                "index_swaps": churn_t["index_swaps"],
+                "n_live": churn_t["mutable"]["n_live"],
+            }
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2, default=float)
         print(f"wrote {json_path}")
@@ -232,6 +272,10 @@ def main(argv=None):
     ap.add_argument("--pressure", type=int, default=16)
     ap.add_argument("--shards", type=int, default=0,
                     help="also bench the sharded backend on this many devices")
+    ap.add_argument("--churn", type=int, default=0, metavar="M",
+                    help="also bench a mixed query/mutation workload: M "
+                         "inserts + M//2 deletes per wave through a "
+                         "MutableAnnIndex engine (policy compaction + swap)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", nargs="?", const="BENCH_serving.json",
                     default=None, metavar="PATH",
@@ -246,7 +290,7 @@ def main(argv=None):
         force_host_devices(args.shards)
     bench(n=args.n, d=args.d, k=args.k, requests=args.requests,
           pressure=args.pressure, shards=args.shards, seed=args.seed,
-          json_path=args.json)
+          churn=args.churn, json_path=args.json)
 
 
 if __name__ == "__main__":

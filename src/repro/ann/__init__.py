@@ -9,12 +9,26 @@ One coherent surface over the subspace-collision stack::
                                            #   executable cache
     index.engine(...)                      # AnnServingEngine over a Searcher
 
+Mutation rides the same facade (:mod:`repro.ann.mutable` /
+:mod:`repro.ann.compaction`)::
+
+    mutable = index.mutable()              # delta segment + tombstones
+    ids = mutable.insert(vectors); mutable.delete(ids[:2])
+    mutable.maybe_compact(engine=engine)   # policy-driven rebuild + atomic
+                                           #   swap on a live engine
+    mutable.save(path)                     # ONE-commit base+delta+tombstones
+
 The legacy free functions (``repro.core.build`` / ``query`` /
 ``query_with_stats`` / ``make_query_fn``) and the engine backend kwargs
 remain supported; they run through the same machinery this package fronts.
 """
 from repro.ann.index import AnnIndex
-from repro.ann.persistence import load_index, save_index
+from repro.ann.persistence import (
+    load_index,
+    load_mutable_index,
+    save_index,
+    save_mutable_index,
+)
 from repro.ann.searcher import (
     AnnBatchResult,
     Searcher,
@@ -22,14 +36,22 @@ from repro.ann.searcher import (
     SingleDeviceSearcher,
     make_searcher,
 )
+from repro.ann.compaction import CompactionPolicy, CompactionReport
+from repro.ann.mutable import MutableAnnIndex, MutableSearcher
 
 __all__ = [
     "AnnBatchResult",
     "AnnIndex",
+    "CompactionPolicy",
+    "CompactionReport",
+    "MutableAnnIndex",
+    "MutableSearcher",
     "Searcher",
     "ShardedSearcher",
     "SingleDeviceSearcher",
     "load_index",
+    "load_mutable_index",
     "make_searcher",
     "save_index",
+    "save_mutable_index",
 ]

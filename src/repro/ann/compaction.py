@@ -1,0 +1,171 @@
+"""Compaction — fold a mutable index's delta + tombstones into a fresh base.
+
+The policy decides *when* churn has earned a rebuild (delta-size and
+tombstone-ratio thresholds — the paper's 8x-cheaper indexing is what makes
+this affordable as a steady-state background cost); :func:`compact` decides
+*how*: snapshot the live corpus, run the ordinary
+:class:`~repro.ann.AnnIndex` build outside any lock, then atomically
+install the result — replaying whatever mutations landed while the build
+ran (a small in-memory WAL) — and swap it into a live serving engine under
+a bumped ``index_generation``. Searches never block on a compaction; they
+keep serving the pre-compaction snapshot until the install instant.
+
+Because the install IS ``AnnIndex.build(live_corpus)`` plus an external-id
+remap, post-compaction search results are bitwise-identical to a
+from-scratch rebuild oracle by construction — the invariant the tests pin.
+
+A live corpus smaller than ``cfg.sqrt_k`` (k-means needs at least one
+point per centroid) compacts into a *delta-only* state: every row moves to
+the brute-force-scanned delta segment and the base drops to None. That is
+also how "compact to empty" behaves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+from repro.ann.index import AnnIndex
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """Thresholds for :meth:`repro.ann.MutableAnnIndex.maybe_compact`.
+
+    A ``None`` field disables that trigger. Defaults are deliberately lax —
+    serving workloads tune them to their churn/latency trade-off.
+    """
+
+    #: compact when the delta segment holds this many rows (live + dead)
+    max_delta_rows: int | None = 4096
+    #: ... or when delta rows exceed this fraction of the live corpus
+    max_delta_frac: float | None = 0.25
+    #: ... or when this fraction of base rows are tombstoned
+    max_tombstone_frac: float | None = 0.25
+
+    def reason(self, stats: dict) -> str | None:
+        """The human-readable trigger that fired, or None."""
+        delta_rows = stats["n_delta_live"] + stats["n_delta_dead"]
+        if self.max_delta_rows is not None and delta_rows >= self.max_delta_rows:
+            return f"delta_rows {delta_rows} >= {self.max_delta_rows}"
+        if (
+            self.max_delta_frac is not None
+            and stats["n_live"] > 0
+            and delta_rows / stats["n_live"] > self.max_delta_frac
+        ):
+            return (
+                f"delta_frac {delta_rows / stats['n_live']:.3f} > "
+                f"{self.max_delta_frac}"
+            )
+        if (
+            self.max_tombstone_frac is not None
+            and stats["n_base"] > 0
+            and stats["n_tombstones"] / stats["n_base"] > self.max_tombstone_frac
+        ):
+            return (
+                f"tombstone_frac "
+                f"{stats['n_tombstones'] / stats['n_base']:.3f} > "
+                f"{self.max_tombstone_frac}"
+            )
+        return None
+
+
+@dataclasses.dataclass
+class CompactionReport:
+    """What one compaction did."""
+
+    reason: str  # policy trigger (or "manual"/"background")
+    duration_s: float  # wall time incl. the index build
+    n_live: int  # rows in the rebuilt corpus
+    reclaimed: int  # (base + delta) rows the rebuild dropped
+    replayed: int  # mutations logged during the build and replayed
+    generation: int  # mutable index generation after the install
+    delta_only: bool  # corpus too small to cluster: no base was built
+
+
+def compact(mutable, *, engine=None, reason: str = "manual") -> CompactionReport:
+    """Rebuild ``base + delta − tombstones`` into a fresh base and install
+    it atomically on ``mutable``.
+
+    The build runs on the caller's thread but outside the mutable index's
+    lock: concurrent searches serve the old snapshot, concurrent mutations
+    are logged and replayed onto the fresh state at install time. When
+    ``engine`` is given, the install also runs
+    :meth:`~repro.serving.ann_engine.AnnServingEngine.swap_index` on it —
+    one generation bump, result cache dropped, stale results never served.
+    Raises RuntimeError if another compaction is already in progress.
+    """
+    t0 = time.perf_counter()
+    snap, vecs, ids = mutable._begin_compaction()
+    return _run_to_install(mutable, snap, vecs, ids, engine=engine,
+                           reason=reason, t0=t0)
+
+
+def _run_to_install(mutable, snap, vecs, ids, *, engine, reason, t0) -> CompactionReport:
+    """Build + install + report (the log was already started)."""
+    try:
+        base = None
+        if vecs.shape[0] >= mutable.cfg.sqrt_k:
+            base = AnnIndex.build(vecs, mutable.cfg)
+    except BaseException:
+        mutable._abort_compaction()
+        raise
+    reclaimed, replayed = mutable._finish_compaction(
+        base, vecs, ids, engine=engine, snapshot=snap
+    )
+    duration = time.perf_counter() - t0
+    mutable._last_compaction_s = duration
+    return CompactionReport(
+        reason=reason,
+        duration_s=duration,
+        n_live=int(vecs.shape[0]),
+        reclaimed=reclaimed,
+        replayed=replayed,
+        generation=mutable.generation,
+        delta_only=base is None,
+    )
+
+
+class CompactionHandle:
+    """A background compaction in flight: ``result()`` joins and returns
+    the :class:`CompactionReport` (re-raising any build failure)."""
+
+    def __init__(self):
+        self.report: CompactionReport | None = None
+        self.error: BaseException | None = None
+        self._thread: threading.Thread | None = None
+
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def result(self, timeout: float | None = None) -> CompactionReport:
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError("compaction still running")
+        if self.error is not None:
+            raise self.error
+        return self.report
+
+
+def compact_async(mutable, *, engine=None, reason: str = "background") -> CompactionHandle:
+    """:func:`compact` on a daemon thread. The mutation log started
+    synchronously (before this returns), so every mutation from now until
+    the install is replayed onto the fresh base — callers keep inserting,
+    deleting and searching while the rebuild runs."""
+    handle = CompactionHandle()
+    t0 = time.perf_counter()
+    snap, vecs, ids = mutable._begin_compaction()  # sync: log starts NOW
+
+    def work():
+        try:
+            handle.report = _run_to_install(
+                mutable, snap, vecs, ids, engine=engine, reason=reason, t0=t0
+            )
+        except BaseException as e:  # surface via result(), don't kill the app
+            handle.error = e
+
+    handle._thread = threading.Thread(
+        target=work, name="taco-compaction", daemon=True
+    )
+    handle._thread.start()
+    return handle

@@ -148,6 +148,17 @@ class AnnIndex:
             sc_index=self.sc_index, cfg=dataclasses.replace(self.cfg, **changes)
         )
 
+    # ------------------------------------------------------------ mutation --
+    def mutable(self, *, policy=None):
+        """Wrap this (immutable) index as the base segment of a
+        :class:`~repro.ann.mutable.MutableAnnIndex`: delta-segment inserts,
+        tombstone deletes, policy-driven compaction back into a fresh base,
+        and atomic swap into live serving engines. The built index is
+        shared, not copied."""
+        from repro.ann.mutable import MutableAnnIndex
+
+        return MutableAnnIndex(self, policy=policy)
+
     # ------------------------------------------------------------- props --
     @property
     def n(self) -> int:

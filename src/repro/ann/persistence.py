@@ -49,10 +49,26 @@ from repro.core.transform import SubspaceTransform
 INDEX_STEP = 0
 FORMAT = "taco-ann-index"
 FORMAT_VERSION = 1
+#: A mutable index save: base SCIndex + delta segment + tombstones + id
+#: maps as ONE pytree, so the whole mid-churn state commits in one rename.
+MUTABLE_FORMAT = "taco-ann-mutable-index"
+MUTABLE_FORMAT_VERSION = 1
 
 
 def _meta_path(path: str) -> str:
     return os.path.join(path, "ann_index.json")
+
+
+def _index_struct(index: SCIndex) -> dict:
+    """The structure flags a template needs to rebuild an SCIndex pytree."""
+    return {
+        "n": int(index.n),
+        "d": int(index.data.shape[1]),
+        "sub_dims": [int(s) for s in index.sub_dims],
+        "has_transform": index.transform is not None,
+        "has_dim_perm": index.dim_perm is not None,
+        "has_data_norms": index.data_norms is not None,
+    }
 
 
 def save_index(index: SCIndex, cfg: SCConfig, path: str) -> str:
@@ -62,12 +78,7 @@ def save_index(index: SCIndex, cfg: SCConfig, path: str) -> str:
         "format": FORMAT,
         "version": FORMAT_VERSION,
         "config": dataclasses.asdict(cfg),
-        "n": int(index.n),
-        "d": int(index.data.shape[1]),
-        "sub_dims": [int(s) for s in index.sub_dims],
-        "has_transform": index.transform is not None,
-        "has_dim_perm": index.dim_perm is not None,
-        "has_data_norms": index.data_norms is not None,
+        **_index_struct(index),
     }
     # device -> host once, then the checkpoint writer's atomic npz+manifest;
     # the meta rides the manifest so config and arrays commit together.
@@ -123,30 +134,137 @@ def _template_index(meta: dict, cfg: SCConfig) -> SCIndex:
     )
 
 
-def load_index(path: str) -> tuple[SCIndex, SCConfig]:
-    """Load ``(index, cfg)`` saved by :func:`save_index`."""
+def _read_format_meta(path: str, want_format: str, want_version: int) -> dict:
+    """The manifest's ``extra`` meta, validated as ``want_format``."""
     try:
         meta = read_manifest(path, INDEX_STEP).get("extra")
     except FileNotFoundError:
         raise FileNotFoundError(
             f"{path}: not a saved ANN index (no step_{INDEX_STEP} checkpoint)"
         ) from None
-    if not isinstance(meta, dict) or meta.get("format") != FORMAT:
+    got = None if not isinstance(meta, dict) else meta.get("format")
+    if got != want_format:
+        hint = ""
+        if got == MUTABLE_FORMAT:
+            hint = " (this is a MUTABLE index save — use MutableAnnIndex.load)"
+        elif got == FORMAT:
+            hint = " (this is an immutable index save — use AnnIndex.load)"
         raise ValueError(
-            f"{path}: checkpoint is not a saved ANN index "
-            f"(manifest extra format: {None if not isinstance(meta, dict) else meta.get('format')!r})"
+            f"{path}: checkpoint format {got!r} != {want_format!r}{hint}"
         )
-    if int(meta.get("version", -1)) > FORMAT_VERSION:
+    if int(meta.get("version", -1)) > want_version:
         raise ValueError(
             f"{path}: index format version {meta['version']} is newer "
-            f"than this code understands (<= {FORMAT_VERSION})"
+            f"than this code understands (<= {want_version})"
         )
+    return meta
+
+
+def _config_of(meta: dict, path: str) -> SCConfig:
     known = {f.name for f in dataclasses.fields(SCConfig)}
     unknown = set(meta["config"]) - known
     if unknown:
         raise ValueError(
             f"{path}: config carries unknown SCConfig fields {sorted(unknown)}"
         )
-    cfg = SCConfig(**meta["config"])
+    return SCConfig(**meta["config"])
+
+
+def load_index(path: str) -> tuple[SCIndex, SCConfig]:
+    """Load ``(index, cfg)`` saved by :func:`save_index`."""
+    meta = _read_format_meta(path, FORMAT, FORMAT_VERSION)
+    cfg = _config_of(meta, path)
     index = restore_pytree(_template_index(meta, cfg), path, INDEX_STEP)
     return index, cfg
+
+
+# ---------------------------------------------------------------- mutable --
+def save_mutable_index(mutable, path: str) -> str:
+    """Persist a :class:`~repro.ann.mutable.MutableAnnIndex` mid-churn.
+
+    Base SCIndex (when present), delta rows, tombstone bitmap and both id
+    maps travel as ONE pytree through :func:`repro.checkpoint.save_pytree`,
+    with the config + id counters + structure flags in the manifest
+    ``extra`` — the whole mutable state commits in a single atomic rename,
+    so a crash mid-save can never pair yesterday's delta with today's
+    tombstones. ``serve_ann``-style restarts resume without replaying
+    mutations (and without a compaction).
+    """
+    with mutable._lock:
+        if mutable._log is not None:
+            raise RuntimeError("cannot save while a compaction is in progress")
+        st = mutable._state
+        meta = {
+            "format": MUTABLE_FORMAT,
+            "version": MUTABLE_FORMAT_VERSION,
+            "config": dataclasses.asdict(mutable.cfg),
+            "d": int(mutable.d),
+            "next_id": int(mutable._next_id),
+            "generation": int(mutable.generation),
+            "compactions": int(mutable._compactions),
+            "n_delta_rows": int(st.n_delta_rows),
+            "n_base": int(st.n_base),
+            "base": None
+            if st.base is None
+            else _index_struct(st.base.sc_index),
+        }
+        tree = {
+            "base_ids": st.base_ids,
+            "tombstones": st.tombstones,
+            "delta": st.delta,
+            "delta_ids": st.delta_ids,
+            "delta_live": st.delta_live,
+        }
+        if st.base is not None:
+            tree["base"] = jax.tree.map(np.asarray, st.base.sc_index)
+    os.makedirs(path, exist_ok=True)
+    save_pytree(jax.tree.map(np.asarray, tree), path, INDEX_STEP, extra_meta=meta)
+    tmp = _meta_path(path) + f".tmp.{os.getpid()}"
+    with open(tmp, "w") as f:  # human-readable mirror, never load-bearing
+        json.dump(meta, f, indent=1)
+    os.replace(tmp, _meta_path(path))
+    return path
+
+
+def load_mutable_index(path: str, *, policy=None):
+    """Load a :func:`save_mutable_index` directory back into a
+    :class:`~repro.ann.mutable.MutableAnnIndex` — bitwise state, including
+    an uncompacted delta and live tombstones."""
+    from repro.ann.index import AnnIndex
+    from repro.ann.mutable import MutableAnnIndex, _State
+
+    meta = _read_format_meta(path, MUTABLE_FORMAT, MUTABLE_FORMAT_VERSION)
+    cfg = _config_of(meta, path)
+    d = int(meta["d"])
+    n_base, m = int(meta["n_base"]), int(meta["n_delta_rows"])
+
+    def sds(shape, dtype=np.float32):
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+    template = {
+        "base_ids": sds((n_base,), np.int32),
+        "tombstones": sds((n_base,), np.bool_),
+        "delta": sds((m, d)),
+        "delta_ids": sds((m,), np.int32),
+        "delta_live": sds((m,), np.bool_),
+    }
+    if meta["base"] is not None:
+        template["base"] = _template_index(meta["base"], cfg)
+    tree = restore_pytree(template, path, INDEX_STEP)
+
+    base = None
+    if meta["base"] is not None:
+        base = AnnIndex(sc_index=tree["base"], cfg=cfg)
+    mutable = MutableAnnIndex(cfg=cfg, dim=d, policy=policy)
+    mutable._state = _State(
+        base=base,
+        base_ids=np.asarray(tree["base_ids"]),
+        tombstones=np.asarray(tree["tombstones"]),
+        delta=np.asarray(tree["delta"]),
+        delta_ids=np.asarray(tree["delta_ids"]),
+        delta_live=np.asarray(tree["delta_live"]),
+    )
+    mutable._next_id = int(meta["next_id"])
+    mutable.generation = int(meta["generation"])
+    mutable._compactions = int(meta["compactions"])
+    return mutable

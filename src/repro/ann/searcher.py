@@ -107,6 +107,31 @@ class Searcher:
         """Execute one already-padded ``(bucket, d)`` query batch."""
         raise NotImplementedError
 
+    # ------------------------------------------------------------- limits --
+    # Request-validation surface for the serving engine: the engine asks the
+    # searcher (not the index it happened to be constructed with) because a
+    # mutable searcher's corpus grows and shrinks under it.
+    @property
+    def dim(self) -> int:
+        """Query dimensionality this searcher accepts."""
+        return self.index.data.shape[1]
+
+    @property
+    def max_k(self) -> int:
+        """Largest servable per-request ``k``."""
+        return self.index.n
+
+    def extra_telemetry(self) -> dict:
+        """Searcher-specific keys merged into the engine's telemetry()."""
+        return {}
+
+    def probe_corpus(self):
+        """(vectors, ids) the engine's recall probes score against — the
+        corpus THIS searcher currently serves, so probes stay truthful
+        across engine index swaps."""
+        data = np.asarray(self.index.data)
+        return data, np.arange(data.shape[0], dtype=np.int64)
+
     # ------------------------------------------------------------ search --
     def _effective(self, k, beta, rerank) -> tuple[int, SCConfig]:
         if self.cfg is None:

@@ -11,7 +11,12 @@ story makes the build fast, but a production restart shouldn't pay even
 that. ``--rerank`` selects the re-rank pipeline (PR 3's streaming
 masked-full path vs the gather path); ``--result-cache N`` puts an N-entry
 LRU result cache in front of the batch path. ``--mixed`` sprinkles
-per-request k/beta overrides to exercise the grouping path. ``--shards N``
+per-request k/beta overrides to exercise the grouping path. ``--churn M``
+serves through a :class:`repro.ann.MutableAnnIndex`: every wave inserts M
+fresh vectors and deletes M//2 live ones between query batches, compacting
+(and atomically swapping the engine's index) when the delta grows past the
+policy threshold; ``--recall-probe-every N`` samples served requests
+against exact kNN over the live corpus. ``--shards N``
 serves through the corpus-sharded backend on an N-way data mesh — on a CPU
 dev box the devices are forced via
 ``XLA_FLAGS=--xla_force_host_platform_device_count``, which must be set
@@ -61,12 +66,23 @@ def main(argv=None):
     ap.add_argument("--result-cache", type=int, default=0, metavar="N",
                     help="LRU result cache entries in front of the batch "
                          "path (0 = off)")
+    ap.add_argument("--churn", type=int, default=0, metavar="M",
+                    help="serve through a MutableAnnIndex: per wave, insert "
+                         "M fresh vectors and delete M//2 live ones between "
+                         "query batches, with policy-driven compaction + "
+                         "atomic engine swap (0 = immutable serving)")
+    ap.add_argument("--recall-probe-every", type=int, default=0, metavar="N",
+                    help="re-answer every Nth served request with exact kNN "
+                         "over the live corpus; report live recall@k")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.pressure < 1:
         ap.error("--pressure must be >= 1")
     if args.shards < 0:
         ap.error("--shards must be >= 0")
+    if args.churn and args.shards > 1:
+        ap.error("--churn serves single-device (sharded delta segments are "
+                 "a ROADMAP follow-on)")
     if args.load_index and args.save_index:
         ap.error("--save-index with --load-index would rewrite the same "
                  "index; pick one")
@@ -131,19 +147,39 @@ def main(argv=None):
             beta = index.cfg.beta * 2
         reqs.append(AnnRequest(query=pool[i % pool.shape[0]], k=k, beta=beta))
 
-    placement = "sharded" if args.shards > 1 else "single"
-    engine = index.engine(placement,
-                          shards=args.shards if args.shards > 1 else None,
-                          max_batch=args.max_batch,
-                          result_cache_size=args.result_cache)
+    mutable = None
+    if args.churn:
+        from repro.ann import CompactionPolicy
+
+        # compaction roughly every 4 churn waves; the swap is the point
+        mutable = index.mutable(
+            policy=CompactionPolicy(max_delta_rows=max(8, 4 * args.churn))
+        )
+        engine = mutable.engine(max_batch=args.max_batch,
+                                result_cache_size=args.result_cache,
+                                recall_probe_every=args.recall_probe_every)
+    else:
+        placement = "sharded" if args.shards > 1 else "single"
+        engine = index.engine(placement,
+                              shards=args.shards if args.shards > 1 else None,
+                              max_batch=args.max_batch,
+                              result_cache_size=args.result_cache,
+                              recall_probe_every=args.recall_probe_every)
     # warm the steady-state executables, then serve in waves; the warm-up
     # queries overlap the measured stream, so drop their cached results
     # to keep the printed latency/QPS about the backend, not cache replay
     engine.search(reqs[: min(args.pressure, len(reqs))])
     engine.reset_telemetry()
     engine.clear_result_cache()
+    churn_rng = np.random.default_rng(args.seed + 7)
+    inserted: list[int] = []
     results = []
     for lo in range(0, len(reqs), args.pressure):
+        if mutable is not None:
+            # mixed workload: mutate between query waves, compact on policy
+            from repro.ann.mutable import churn_wave
+
+            churn_wave(mutable, churn_rng, inserted, args.churn, engine=engine)
         results.extend(engine.search(reqs[lo : lo + args.pressure]))
 
     t = engine.telemetry()
@@ -157,7 +193,20 @@ def main(argv=None):
     if args.result_cache:
         print(f"  result cache: {t['result_cache_hits']} hits / "
               f"{t['result_cache_misses']} misses "
-              f"({t['result_cache_entries']} entries)")
+              f"({t['result_cache_entries']} entries, "
+              f"{t['result_cache_invalidations']} invalidations)")
+    if args.recall_probe_every:
+        recall = t["live_recall_at_k"]
+        print(f"  live recall@k {recall if recall is None else f'{recall:.4f}'}"
+              f" over {t['recall_probe_count']} probes")
+    if mutable is not None:
+        ms = t["mutable"]
+        print(f"  mutable: {ms['n_live']} live ({ms['n_delta_live']} delta, "
+              f"{ms['n_tombstones']} tombstones), "
+              f"{ms['compactions']} compactions "
+              f"(last {0 if ms['last_compaction_s'] is None else ms['last_compaction_s'] * 1e3:.0f} ms), "
+              f"generation {t['index_generation']}, "
+              f"{t['index_swaps']} engine swaps")
     if t["shards"] > 1:
         mean_c = ", ".join(f"{c:.0f}" for c in t["shard_candidates_mean"])
         print(f"  per-shard candidates/query [{mean_c}]   "

@@ -16,9 +16,15 @@ Two engines share the micro-batching helpers in
     :class:`SingleDeviceAnnBackend` (default) or :class:`ShardedAnnBackend`
     (corpus-sharded shard_map query over a device mesh) — each a thin
     adapter over a :class:`repro.ann.Searcher`, the layer that owns device
-    placement and the executable cache. The lifecycle facade
-    (:class:`repro.ann.AnnIndex` — build / save / load / searcher / engine)
-    is the preferred way to construct all of this.
+    placement and the executable cache. Live-index lifecycle:
+    ``swap_index()`` atomically replaces the served index under a
+    monotonic ``index_generation`` (result cache dropped, every result
+    stamped); ``recall_probe_every=N`` reports live recall@k from exact-kNN
+    probes of served requests; a :class:`repro.ann.MutableAnnIndex` plugs
+    in as a backend searcher for insert/delete/compaction churn. The
+    lifecycle facade (:class:`repro.ann.AnnIndex` — build / save / load /
+    searcher / engine / mutable) is the preferred way to construct all of
+    this.
 """
 from repro.serving.ann_engine import (
     AnnBackend,

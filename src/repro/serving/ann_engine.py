@@ -39,9 +39,21 @@ Placement and compilation live in :mod:`repro.ann.searcher`;
 :class:`~repro.ann.searcher.Searcher` to the engine's batch loop (their
 legacy constructor signatures build the matching searcher). Prefer
 constructing engines through :meth:`repro.ann.AnnIndex.engine`, which
-passes the searcher straight through. Future scaling layers (async queues,
-recall probes — see ROADMAP) plug into the same protocol instead of into
-the engine's batch loop.
+passes the searcher straight through. Future scaling layers (async queues
+— see ROADMAP) plug into the same protocol instead of into the engine's
+batch loop.
+
+Index lifecycle on a live engine
+--------------------------------
+``swap_index()`` atomically replaces the served index between batches
+under a monotonic ``index_generation`` (every :class:`AnnResult` is
+stamped with the generation it was computed at) and drops the result
+cache, so a stale-generation cached result is never served after a swap.
+:class:`repro.ann.MutableAnnIndex` drives the same machinery for in-place
+mutation (``notify_index_mutated``) and background compaction.
+``recall_probe_every=N`` samples every Nth executed request, re-answers it
+with exact kNN over the live corpus, and reports ``live_recall_at_k`` in
+``telemetry()``.
 
 ``search()`` is the synchronous convenience wrapper (submit all, drain,
 return in request order).
@@ -86,6 +98,10 @@ class AnnResult:
     latency_s: float  # wall time of the batch that served this request
     shard_candidates: np.ndarray | None = None  # (S,) per-shard demand (sharded)
     cached: bool = False  # served from the result cache, no device work
+    #: engine's index generation when this result was computed; bumped by
+    #: swap_index() and by mutable-index mutations, so a consumer can tell
+    #: which version of the corpus a (possibly cached) answer describes
+    index_generation: int = 0
 
 
 def _copied_arrays(r: AnnResult) -> dict:
@@ -118,6 +134,20 @@ class AnnBackend:
     def shards(self) -> int:
         """Data shards the corpus is split over (1 = no sharding)."""
         return self.searcher.shards
+
+    @property
+    def dim(self) -> int:
+        """Query dimensionality (request validation delegates here)."""
+        return self.searcher.dim
+
+    @property
+    def max_k(self) -> int:
+        """Largest servable per-request ``k``."""
+        return self.searcher.max_k
+
+    def extra_telemetry(self) -> dict:
+        """Backend-specific keys merged into the engine's telemetry()."""
+        return self.searcher.extra_telemetry()
 
     # The executable cache lives on the searcher; these views keep the
     # engine's (and older callers') telemetry surface unchanged.
@@ -230,6 +260,8 @@ class AnnServingEngine:
         mesh=None,
         shards: int | None = None,
         result_cache_size: int = 0,
+        recall_probe_every: int = 0,
+        recall_probe_corpus=None,
     ):
         self.index = index
         self.cfg = cfg
@@ -260,6 +292,26 @@ class AnnServingEngine:
         self._result_cache: OrderedDict = OrderedDict()  # key -> AnnResult
         self._cache_hits = 0
         self._cache_misses = 0
+        # Index lifecycle (ROADMAP "atomic index swap on a live engine"):
+        # the generation is a monotonic version of the corpus view this
+        # engine serves; swap_index() and mutable-index mutations bump it
+        # and drop the result cache, so a stale-generation cached result is
+        # never served across a swap. Every AnnResult is stamped with it.
+        self.index_generation = 0
+        self._swaps = 0
+        self._invalidations = 0
+        # Live recall probes (ROADMAP): every Nth EXECUTED request is
+        # re-answered by exact kNN over the current corpus and compared to
+        # what was served. The corpus defaults to the backend searcher's
+        # probe_corpus() — a mutable searcher reports its live (base −
+        # tombstones + delta) view — so probes follow swap_index(); an
+        # explicit recall_probe_corpus callable overrides it until the
+        # next swap (which re-binds probes to the new backend).
+        self.recall_probe_every = int(recall_probe_every)
+        self._recall_probe_corpus = recall_probe_corpus
+        self._probe_tick = 0
+        self._probe_recall_sum = 0.0
+        self._probe_count = 0
 
     @property
     def searcher(self) -> Searcher:
@@ -282,14 +334,15 @@ class AnnServingEngine:
         Validates eagerly: a malformed request must fail here, at its own
         call site, not crash a later drain() batch that also carries other
         callers' requests."""
-        d = self.index.data.shape[1]
+        d = self.backend.dim
         q = np.asarray(request.query, np.float32)
         if q.shape != (d,):
             raise ValueError(f"query shape {q.shape} != ({d},)")
         if request.k is not None:
             k = int(request.k)
-            if not 0 < k <= self.index.n:
-                raise ValueError(f"k={request.k} out of range (0, {self.index.n}]")
+            max_k = self.backend.max_k
+            if not 0 < k <= max_k:
+                raise ValueError(f"k={request.k} out of range (0, {max_k}]")
         if request.beta is not None and not 0.0 < float(request.beta) <= 1.0:
             raise ValueError(f"beta={request.beta} out of range (0, 1]")
         if request.rerank is not None and request.rerank not in (
@@ -358,7 +411,10 @@ class AnnServingEngine:
                 continue
             self._result_cache.move_to_end(key)
             self._cache_hits += 1
+            # stamp the CURRENT generation: swaps/mutations clear the cache,
+            # so a surviving entry describes the live corpus view
             out[rid] = dataclasses.replace(hit, latency_s=0.0, cached=True,
+                                           index_generation=self.index_generation,
                                            **_copied_arrays(hit))
             self._latencies.append(0.0)
             self._truncated += int(hit.truncated)
@@ -383,6 +439,90 @@ class AnnServingEngine:
         overlap the traffic you are about to measure)."""
         self._result_cache.clear()
 
+    # ------------------------------------------------------ index lifecycle --
+    def swap_index(self, new, *, cfg: SCConfig | None = None) -> int:
+        """Atomically swap the served index while the engine stays live.
+
+        ``new``: a :class:`~repro.ann.searcher.Searcher` (owns placement +
+        executables for the replacement index), an :class:`AnnBackend`, or
+        an ``AnnIndex`` facade (a single-device searcher is built from it;
+        pass a prebuilt searcher for sharded placement). ``cfg`` replaces
+        the engine's default config (defaults to an AnnIndex's own cfg).
+
+        The swap is atomic at request granularity: it happens between
+        ``drain()`` batches (Python-level reference swaps), bumps the
+        monotonic ``index_generation``, and drops the result cache — a
+        cached result computed against the old index is never served after
+        the swap. Queued-but-undrained requests are served by the NEW
+        index. Per-shard telemetry counters reset (the shard layout may
+        have changed); scalar traffic counters are kept. Returns the new
+        generation.
+        """
+        # An index facade (AnnIndex or MutableAnnIndex): take its config and
+        # a single-device searcher over it.
+        if not isinstance(new, (Searcher, AnnBackend)) and callable(
+            getattr(new, "searcher", None)
+        ):
+            if cfg is None:
+                cfg = new.cfg
+            new = new.searcher("single")
+        if isinstance(new, Searcher):
+            backend = _make_backend(
+                new, None, mesh=None, shards=None, max_cached_fns=None
+            )
+        elif isinstance(new, AnnBackend):
+            backend = new
+        else:
+            raise TypeError(
+                f"swap_index wants a Searcher, AnnBackend or AnnIndex, got "
+                f"{type(new).__name__}"
+            )
+        self.backend = backend
+        self.index = getattr(backend.searcher, "index", None)
+        if cfg is not None:
+            self.cfg = cfg
+        # probes must score against the corpus now being served, not a
+        # callable bound to the replaced index
+        self._recall_probe_corpus = None
+        self._shard_candidates = np.zeros(self.backend.shards, np.int64)
+        self._shard_truncated = np.zeros(self.backend.shards, np.int64)
+        self.index_generation += 1
+        self._swaps += 1
+        self.clear_result_cache()
+        return self.index_generation
+
+    def notify_index_mutated(self) -> int:
+        """The corpus behind the backend changed in place (mutable-index
+        insert/delete/compaction install): cached results are stale. Bumps
+        ``index_generation`` and drops the result cache; the backend itself
+        is untouched (a mutable searcher reads the live state per batch).
+        Returns the new generation."""
+        self.index_generation += 1
+        self._invalidations += 1
+        self.clear_result_cache()
+        return self.index_generation
+
+    # ------------------------------------------------------- recall probes --
+    def _probe_corpus(self):
+        if self._recall_probe_corpus is not None:
+            return self._recall_probe_corpus()
+        return self.backend.searcher.probe_corpus()
+
+    def _record_recall_probe(self, query: np.ndarray, result: AnnResult, k: int):
+        """Re-answer one served request with exact kNN over the live corpus
+        and record recall@k of what was actually served."""
+        corpus, ids = self._probe_corpus()
+        m = int(np.asarray(corpus).shape[0])
+        if m == 0:
+            return  # nothing live: recall undefined, skip the sample
+        kk = min(k, m)
+        diff = np.asarray(corpus, np.float32) - query[None, :]
+        dist = np.einsum("md,md->m", diff, diff)
+        exact = set(np.asarray(ids)[np.lexsort((ids, dist))[:kk]].tolist())
+        served = {int(i) for i in np.asarray(result.ids)[:k] if i >= 0}
+        self._probe_recall_sum += len(served & exact) / kk
+        self._probe_count += 1
+
     # ------------------------------------------------------ compiled path --
     def _effective(self, req: AnnRequest) -> tuple[int, SCConfig]:
         return effective_query_params(self.cfg, req.k, req.beta, req.rerank)
@@ -405,6 +545,7 @@ class AnnServingEngine:
                 shard_candidates=None
                 if res.shard_candidates is None
                 else res.shard_candidates[i],
+                index_generation=self.index_generation,
             )
             if self.result_cache_size > 0:
                 self._cache_store(req, group_key, out[rid])
@@ -416,6 +557,12 @@ class AnnServingEngine:
             if res.shard_candidates is not None:
                 self._shard_candidates += res.shard_candidates[i]
                 self._shard_truncated += res.shard_truncated[i]
+            if self.recall_probe_every > 0:
+                self._probe_tick += 1
+                if self._probe_tick % self.recall_probe_every == 0:
+                    self._record_recall_probe(
+                        np.asarray(req.query, np.float32), out[rid], k
+                    )
 
     # --------------------------------------------------------- telemetry --
     def reset_telemetry(self) -> None:
@@ -433,6 +580,11 @@ class AnnServingEngine:
         self._shard_truncated = np.zeros(self.backend.shards, np.int64)
         self._cache_hits = 0
         self._cache_misses = 0
+        # probes are traffic stats; the generation/swap/invalidation
+        # counters describe the engine's lifetime (like compile counts)
+        self._probe_tick = 0
+        self._probe_recall_sum = 0.0
+        self._probe_count = 0
 
     def telemetry(self) -> dict:
         lat = np.asarray(self._latencies, np.float64)
@@ -453,7 +605,18 @@ class AnnServingEngine:
             "result_cache_hits": self._cache_hits,
             "result_cache_misses": self._cache_misses,
             "result_cache_entries": len(self._result_cache),
+            "index_generation": self.index_generation,
+            "index_swaps": self._swaps,
+            "result_cache_invalidations": self._invalidations,
         }
+        if self.recall_probe_every > 0:
+            out["recall_probe_count"] = self._probe_count
+            out["live_recall_at_k"] = (
+                self._probe_recall_sum / self._probe_count
+                if self._probe_count
+                else None
+            )
+        out.update(self.backend.extra_telemetry())
         if self.backend.shards > 1:
             # per-shard candidate demand + truncation, and the size of the
             # all-gather combine (id/dist pairs moved per query: shards*k).

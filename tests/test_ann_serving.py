@@ -209,3 +209,73 @@ def test_telemetry_counters_consistent(served_index):
     assert engine.pending() == 0
     # per-request latency is the wall time of its batch
     assert all(r.latency_s > 0 for r in results)
+
+
+# ------------------------------------------------------- index lifecycle --
+def test_swap_index_on_live_engine(served_index, small_dataset):
+    """swap_index: atomic between drains, monotonic generation, cache
+    dropped (stale-generation results never served), new index serves."""
+    from repro.ann import AnnIndex
+
+    index, cfg, queries = served_index
+    data, _q, _gt_i, _gt_d = small_dataset
+    engine = _fresh_engine(index, cfg, max_batch=8, result_cache_size=16)
+    r0 = engine.search([AnnRequest(query=q) for q in queries[:4]])
+    assert all(r.index_generation == 0 for r in r0)
+    assert all(r.cached for r in
+               engine.search([AnnRequest(query=q) for q in queries[:4]]))
+
+    # rebuild over a shifted corpus (drop the first 32 rows): results differ
+    new = AnnIndex.build(np.asarray(data)[32:], cfg)
+    gen = engine.swap_index(new)
+    assert gen == 1 and engine.telemetry()["index_swaps"] == 1
+    r1 = engine.search([AnnRequest(query=q) for q in queries[:4]])
+    assert not any(r.cached for r in r1), "stale cache served across swap"
+    assert all(r.index_generation == 1 for r in r1)
+    want_ids, want_d = new.search(queries[:4])
+    np.testing.assert_array_equal(np.stack([r.ids for r in r1]),
+                                  np.asarray(want_ids))
+    np.testing.assert_array_equal(np.stack([r.dists for r in r1]),
+                                  np.asarray(want_d))
+    # queued-but-undrained requests are served by the NEW index
+    rid = engine.submit(AnnRequest(query=queries[5]))
+    engine.swap_index(AnnIndex(sc_index=index, cfg=cfg))
+    res = engine.drain()[rid]
+    np.testing.assert_array_equal(res.ids, np.asarray(query(index, queries[5:6], cfg)[0])[0])
+    assert res.index_generation == 2
+
+
+def test_swap_index_rejects_garbage(served_index):
+    index, cfg, _queries = served_index
+    engine = _fresh_engine(index, cfg)
+    with pytest.raises(TypeError):
+        engine.swap_index(42)
+
+
+def test_notify_index_mutated_bumps_generation(served_index):
+    index, cfg, queries = served_index
+    engine = _fresh_engine(index, cfg, max_batch=4, result_cache_size=8)
+    engine.search([AnnRequest(query=queries[0])])
+    assert engine.search([AnnRequest(query=queries[0])])[0].cached
+    engine.notify_index_mutated()
+    r = engine.search([AnnRequest(query=queries[0])])[0]
+    assert not r.cached and r.index_generation == 1
+    assert engine.telemetry()["result_cache_invalidations"] == 1
+
+
+def test_recall_probes_report_live_recall(served_index, small_dataset):
+    """recall_probe_every=N: every Nth executed request is re-answered by
+    exact kNN; telemetry reports the running mean recall@k."""
+    index, cfg, queries = served_index
+    _data, _q, gt_i, _gt_d = small_dataset
+    engine = _fresh_engine(index, cfg, max_batch=8, recall_probe_every=2,
+                           result_cache_size=32)
+    engine.search([AnnRequest(query=q) for q in queries])
+    t = engine.telemetry()
+    assert t["recall_probe_count"] == len(queries) // 2
+    assert 0.0 < t["live_recall_at_k"] <= 1.0
+    # cache hits never reach the backend, so they are never probed
+    engine.search([AnnRequest(query=q) for q in queries])
+    assert engine.telemetry()["recall_probe_count"] == len(queries) // 2
+    engine.reset_telemetry()
+    assert engine.telemetry()["recall_probe_count"] == 0

@@ -1,0 +1,383 @@
+"""Mutable ANN subsystem: delta-segment inserts, tombstone deletes,
+compaction + atomic swap, and bitwise parity with a from-scratch rebuild.
+
+Parity protocol (mirrors tests/test_masked_rerank.py): integer-valued
+vectors make every exact squared distance representable in float32, so the
+two re-rank pipelines and the delta scan agree bitwise; exhaustive
+candidate selection (``selection="fixed", beta=1.0``) removes the base
+segment's SC approximation, so an UNCOMPACTED mutable search must equal an
+``AnnIndex.build`` from-scratch oracle over the live corpus exactly. After
+``compact()`` the equality holds for ANY config by construction.
+"""
+import numpy as np
+import pytest
+
+from repro.ann import (
+    AnnIndex,
+    CompactionPolicy,
+    MutableAnnIndex,
+)
+from repro.core import taco_config
+from repro.serving import AnnRequest
+
+D = 32
+K = 10
+
+
+def int_vectors(n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 30, (n, D)).astype(np.float32)
+
+
+def exhaustive_cfg(**kw):
+    """Every point is a candidate: fixed selection with a beta*n == n
+    budget reranks the whole corpus exactly, for both rerank pipelines."""
+    base = dict(n_subspaces=3, subspace_dim=8, n_clusters=64, kmeans_iters=4,
+                alpha=0.1, beta=1.0, selection="fixed", k=K)
+    return taco_config(**{**base, **kw})
+
+
+def oracle_search(mutable, queries, *, k=None, rerank=None):
+    """From-scratch rebuild over the live corpus; positional ids translated
+    to the mutable index's stable external ids."""
+    oracle, id_map = mutable.rebuild_oracle()
+    if rerank is not None:
+        oracle = oracle.replace_cfg(rerank=rerank)
+    ids, dists = oracle.search(queries, k=k)
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    return np.where(ids >= 0, id_map[np.maximum(ids, 0)], -1), dists
+
+
+def assert_parity(mutable, queries, *, k=None, rerank=None):
+    got_i, got_d = mutable.search(queries, k=k, rerank=rerank)
+    want_i, want_d = oracle_search(mutable, queries, k=k, rerank=rerank)
+    np.testing.assert_array_equal(got_i, want_i)
+    np.testing.assert_array_equal(got_d, want_d)  # bitwise
+    return got_i
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return int_vectors(512, 0), int_vectors(48, 1), int_vectors(8, 2)
+
+
+@pytest.fixture()
+def churned(corpus):
+    """A mutable index with inserts + deletes in flight (uncompacted)."""
+    data, extra, _q = corpus
+    m = MutableAnnIndex.build(data, exhaustive_cfg())
+    new_ids = m.insert(extra)
+    m.delete(list(range(0, 12)) + [int(new_ids[3])])
+    return m, new_ids
+
+
+# ------------------------------------------------------------------ parity --
+@pytest.mark.parametrize("rerank", ["gather", "masked_full"])
+def test_churned_search_bitwise_equals_rebuild_oracle(churned, corpus, rerank):
+    m, _new_ids = churned
+    _data, _extra, queries = corpus
+    ids = assert_parity(m, queries, rerank=rerank)
+    # tombstoned rows (base AND delta) must never surface
+    dead = set(range(0, 12))
+    assert not (dead & set(ids.ravel().tolist()))
+
+
+def test_empty_delta_query_equals_base(corpus):
+    """No mutations: the fan-out path must degenerate to the plain base
+    search bitwise (same executables, no delta scan, no over-fetch)."""
+    data, _extra, queries = corpus
+    cfg = exhaustive_cfg()
+    m = MutableAnnIndex.build(data, cfg)
+    base = AnnIndex.build(data, cfg)
+    want_i, want_d = base.search(queries)
+    got_i, got_d, stats = m.search_with_stats(queries)
+    np.testing.assert_array_equal(got_i, np.asarray(want_i))
+    np.testing.assert_array_equal(got_d, np.asarray(want_d))
+    assert stats["truncated"].shape == (queries.shape[0],)
+
+
+def test_delete_then_reinsert_same_vector(corpus):
+    data, _extra, queries = corpus
+    m = MutableAnnIndex.build(data, exhaustive_cfg())
+    v = data[7].copy()
+    m.delete([7])
+    (rid,) = m.insert(v)
+    ids, dists = m.search(v[None], k=3)
+    assert ids[0, 0] == rid, "reinserted vector must win under its NEW id"
+    assert dists[0, 0] == 0.0
+    assert 7 not in ids[0]
+    assert_parity(m, queries)
+
+
+def test_compaction_installs_rebuild_for_realistic_config(corpus):
+    """With a production-style config (query-aware selection, small beta)
+    the uncompacted path is approximate — but compaction IS the rebuild,
+    so post-compaction results are bitwise-equal for any config."""
+    data, extra, queries = corpus
+    cfg = taco_config(n_subspaces=3, subspace_dim=8, n_clusters=64,
+                      kmeans_iters=4, alpha=0.1, beta=0.05, k=K)
+    m = MutableAnnIndex.build(data, cfg)
+    ids = m.insert(extra)
+    m.delete(list(range(20)) + [int(i) for i in ids[:5]])
+    report = m.compact()
+    assert not report.delta_only and report.reclaimed == 25
+    assert not m.dirty
+    assert_parity(m, queries)
+    assert_parity(m, queries, rerank="masked_full")
+
+
+def test_compact_to_empty_and_grow_back(corpus):
+    data, _extra, queries = corpus
+    m = MutableAnnIndex.build(data[:64], exhaustive_cfg(n_clusters=16))
+    m.delete(list(range(64)))
+    ids, dists = m.search(queries, k=4)
+    assert (ids == -1).all() and np.isinf(dists).all()
+    report = m.compact()
+    assert report.delta_only and m.n_live == 0 and m.stats()["n_base"] == 0
+    new = m.insert(data[:5])
+    ids, dists = m.search(data[:1], k=2)
+    assert ids[0, 0] == new[0] and dists[0, 0] == 0.0
+    assert_parity(m, queries, k=4)
+
+
+def test_k_larger_than_live_pads_with_minus_one(corpus):
+    data, _extra, _q = corpus
+    m = MutableAnnIndex.build(data[:64], exhaustive_cfg(n_clusters=16))
+    m.delete(list(range(60)))
+    ids, dists = m.search(data[:2], k=8)
+    assert (ids >= 0).sum(axis=1).tolist() == [4, 4]
+    assert np.isinf(dists[:, 4:]).all()
+
+
+# ---------------------------------------------------------------- mutation --
+def test_delete_unknown_or_dead_id_raises_and_mutates_nothing(churned):
+    m, new_ids = churned
+    before = m.stats()
+    with pytest.raises(KeyError):
+        m.delete([10 ** 6])  # never existed
+    with pytest.raises(KeyError):
+        m.delete([3])  # already tombstoned
+    with pytest.raises(KeyError):
+        m.delete([int(new_ids[3])])  # dead delta row
+    with pytest.raises(KeyError):
+        m.delete([int(new_ids[5]), 3])  # partial batch: all-or-nothing
+    after = m.stats()
+    assert before == after
+
+
+def test_insert_validates_dim(churned):
+    m, _ = churned
+    with pytest.raises(ValueError):
+        m.insert(np.zeros((2, D + 1), np.float32))
+
+
+def test_ids_are_monotonic_and_never_reused(corpus):
+    data, extra, _q = corpus
+    m = MutableAnnIndex.build(data, exhaustive_cfg())
+    a = m.insert(extra[:4])
+    m.delete([int(a[-1])])
+    b = m.insert(extra[:4])
+    assert b.min() > a.max()
+    m.compact()
+    c = m.insert(extra[:2])
+    assert c.min() > b.max(), "compaction must not reset the id counter"
+
+
+# -------------------------------------------------------------- compaction --
+def test_policy_reasons():
+    pol = CompactionPolicy(max_delta_rows=8, max_delta_frac=0.5,
+                           max_tombstone_frac=0.25)
+    base = dict(n_base=100, n_tombstones=0, n_delta_live=0, n_delta_dead=0,
+                n_live=100)
+    assert pol.reason(base) is None
+    assert "delta_rows" in pol.reason({**base, "n_delta_live": 8})
+    assert "tombstone_frac" in pol.reason({**base, "n_tombstones": 26,
+                                           "n_live": 74})
+    few = dict(base, n_base=4, n_live=6, n_delta_live=3)
+    assert "delta_frac" in CompactionPolicy(
+        max_delta_rows=None, max_delta_frac=0.25, max_tombstone_frac=None
+    ).reason(few)
+
+
+def test_maybe_compact_triggers_on_policy(corpus):
+    data, extra, _q = corpus
+    m = MutableAnnIndex.build(
+        data, exhaustive_cfg(), policy=CompactionPolicy(max_delta_rows=16)
+    )
+    m.insert(extra[:8])
+    assert m.maybe_compact() is None
+    m.insert(extra[8:16])
+    report = m.maybe_compact()
+    assert report is not None and "delta_rows" in report.reason
+    assert not m.dirty and m.stats()["compactions"] == 1
+
+
+def test_background_compaction_replays_concurrent_mutations(corpus):
+    """Mutations that land while a compaction builds are replayed onto the
+    fresh base at install (the in-memory WAL) — final state matches a
+    rebuild over the final corpus bitwise."""
+    from repro.ann.compaction import _run_to_install
+
+    data, extra, queries = corpus
+    m = MutableAnnIndex.build(data, exhaustive_cfg())
+    m.insert(extra[:8])
+    # deterministic version of the race: snapshot, then mutate mid-build
+    snap, vecs, ids = m._begin_compaction()
+    mid = m.insert(extra[8:12])
+    m.delete([int(mid[0]), 40])
+    with pytest.raises(RuntimeError):
+        m.compact()  # one compaction at a time
+    report = _run_to_install(m, snap, vecs, ids, engine=None, reason="t", t0=0.0)
+    assert report.replayed == 2
+    # nothing from the SNAPSHOT was dropped; mid-build inserts that survive
+    # in the replayed delta must not count as reclaimed
+    assert report.reclaimed == 0
+    st = m.stats()
+    assert st["n_delta_live"] == 3 and st["n_tombstones"] == 1
+    assert_parity(m, queries)
+    # the async wrapper reports through the handle
+    handle = m.compact_async()
+    report = handle.result(timeout=120)
+    assert report.generation == m.generation and not m.dirty
+
+
+# ------------------------------------------------------------- persistence --
+def test_save_load_dirty_state_bitwise(churned, corpus, tmp_path):
+    m, _ = churned
+    _data, extra, queries = corpus
+    path = str(tmp_path / "mutable")
+    m.save(path)
+    loaded = MutableAnnIndex.load(path)
+    def persisted(stats):  # 'mutations' counts THIS process's ops, not state
+        return {k: v for k, v in stats.items() if k != "mutations"}
+    assert persisted(loaded.stats()) == persisted(m.stats())
+    for rerank in ("gather", "masked_full"):
+        a_i, a_d = m.search(queries, rerank=rerank)
+        b_i, b_d = loaded.search(queries, rerank=rerank)
+        np.testing.assert_array_equal(a_i, b_i)
+        np.testing.assert_array_equal(a_d, b_d)
+    # id counter survives: later inserts can't collide with pre-save ids
+    got = loaded.insert(extra[:1])
+    assert got[0] == m.stats()["next_id"]
+
+
+def test_save_load_delta_only_state(corpus, tmp_path):
+    data, _extra, _q = corpus
+    m = MutableAnnIndex(cfg=exhaustive_cfg(), dim=D)
+    m.insert(data[:6])
+    m.delete([2])
+    path = str(tmp_path / "delta_only")
+    m.save(path)
+    loaded = MutableAnnIndex.load(path)
+    assert loaded.n_live == m.n_live and loaded.generation == m.generation
+    a = m.search(data[:3], k=3)
+    b = loaded.search(data[:3], k=3)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_cross_format_loads_fail_with_hint(corpus, tmp_path):
+    data, _extra, _q = corpus
+    cfg = exhaustive_cfg()
+    AnnIndex.build(data[:64], cfg).save(str(tmp_path / "imm"))
+    with pytest.raises(ValueError, match="use AnnIndex.load"):
+        MutableAnnIndex.load(str(tmp_path / "imm"))  # wrong direction
+    m = MutableAnnIndex.build(data[:64], cfg)
+    m.save(str(tmp_path / "mut"))
+    with pytest.raises(ValueError, match="use MutableAnnIndex.load"):
+        AnnIndex.load(str(tmp_path / "mut"))
+
+
+# ------------------------------------------------------------- live engine --
+def test_engine_parity_across_atomic_swap(corpus):
+    """The acceptance gate: via a live engine, results stay bitwise-equal
+    to the rebuild oracle before AND after a compaction swap, and no
+    stale-generation cached result is ever served."""
+    data, extra, queries = corpus
+    m = MutableAnnIndex.build(data, exhaustive_cfg())
+    engine = m.engine(max_batch=8, result_cache_size=32)
+
+    def engine_ids(qs, rerank=None):
+        res = engine.search([AnnRequest(query=q, rerank=rerank) for q in qs])
+        return (np.stack([r.ids for r in res]),
+                np.stack([r.dists for r in res]), res)
+
+    ids = m.insert(extra)
+    m.delete(list(range(6)) + [int(ids[0])])
+    for rerank in (None, "masked_full"):  # both re-rank pipelines
+        got_i, got_d, res = engine_ids(queries, rerank)
+        want_i, want_d = oracle_search(m, queries, rerank=rerank)
+        np.testing.assert_array_equal(got_i, want_i)
+        np.testing.assert_array_equal(got_d, want_d)
+    gen_before = engine.index_generation
+
+    _got = engine_ids(queries)[2]
+    assert all(r.cached for r in _got), "repeat traffic should hit the cache"
+
+    report = m.compact(engine=engine)
+    assert engine.telemetry()["index_swaps"] == 1
+    assert engine.index_generation > gen_before
+    for rerank in (None, "masked_full"):
+        got_i, got_d, res = engine_ids(queries, rerank)
+        assert not any(r.cached for r in res), "stale cache served across swap"
+        assert all(r.index_generation == engine.index_generation for r in res)
+        want_i, want_d = oracle_search(m, queries, rerank=rerank)
+        np.testing.assert_array_equal(got_i, want_i)
+        np.testing.assert_array_equal(got_d, want_d)
+    assert report.generation == m.generation
+
+
+def test_engine_mutation_invalidates_cache_and_serves_fresh(corpus):
+    data, extra, queries = corpus
+    m = MutableAnnIndex.build(data, exhaustive_cfg())
+    engine = m.engine(max_batch=8, result_cache_size=32)
+    q = queries[:1]
+    engine.search([AnnRequest(query=q[0])])
+    assert engine.search([AnnRequest(query=q[0])])[0].cached
+    gen = engine.index_generation
+    (new_id,) = m.insert(q[0])  # exact duplicate of the query
+    r = engine.search([AnnRequest(query=q[0])])[0]
+    assert not r.cached and r.index_generation > gen
+    assert r.ids[0] == new_id and r.dists[0] == 0.0
+    t = engine.telemetry()
+    assert t["result_cache_invalidations"] >= 1
+    assert t["mutable"]["n_delta_live"] == 1
+
+
+def test_engine_recall_probes_on_live_corpus(corpus):
+    data, extra, queries = corpus
+    m = MutableAnnIndex.build(data, exhaustive_cfg())
+    m.insert(extra[:8])
+    m.delete([1, 2])
+    engine = m.engine(max_batch=8, recall_probe_every=2)
+    engine.search([AnnRequest(query=q) for q in queries])
+    t = engine.telemetry()
+    assert t["recall_probe_count"] == len(queries) // 2
+    # exhaustive selection + exact delta scan: live recall is exactly 1
+    assert t["live_recall_at_k"] == 1.0
+
+
+def test_mutable_searcher_rejects_sharded_placement(churned):
+    m, _ = churned
+    with pytest.raises(ValueError, match="single"):
+        m.searcher("sharded")
+
+
+def test_recall_probe_corpus_follows_engine_swap(corpus):
+    """Probes must score against the corpus the engine CURRENTLY serves —
+    after swap_index the old (mutable) live-corpus binding must not leak
+    into the probe, or live_recall_at_k reports garbage."""
+    data, extra, queries = corpus
+    m = MutableAnnIndex.build(data, exhaustive_cfg())
+    engine = m.engine(max_batch=8, recall_probe_every=1)
+    engine.search([AnnRequest(query=q) for q in queries])
+    assert engine.telemetry()["live_recall_at_k"] == 1.0
+
+    engine.swap_index(AnnIndex.build(extra, exhaustive_cfg()))
+    engine.reset_telemetry()
+    engine.search([AnnRequest(query=q) for q in queries])
+    t = engine.telemetry()
+    assert t["recall_probe_count"] == len(queries)
+    # exhaustive selection over the NEW corpus: recall is exactly 1 — it
+    # would be far below 1 if probes still compared against the old corpus
+    assert t["live_recall_at_k"] == 1.0
