@@ -18,9 +18,13 @@ Per-stage timings for both pipelines are reported alongside. ``--shards
 N`` also times the corpus-sharded backend (``backend="sharded"``) on an
 N-way data mesh; on a CPU dev box the devices are forced via
 ``XLA_FLAGS=--xla_force_host_platform_device_count`` (set before jax
-initializes — hence the deferred imports). ``--json PATH`` persists the
-numbers (QPS, p50/p99, stage timings) for trend tracking — the committed
-baseline lives at BENCH_serving.json in the repo root.
+initializes — hence the deferred imports). ``--producers P`` also times
+the async pipeline: P concurrent threads submitting to the background
+drain worker (per-request futures, ``--deadline-ms`` SLOs), recording
+async-vs-sync QPS/p99 plus queue-depth / deadline-miss / shed stats.
+``--json PATH`` persists the numbers (QPS, p50/p99, stage timings) for
+trend tracking — the committed baseline lives at BENCH_serving.json in
+the repo root.
 
   PYTHONPATH=src python benchmarks/bench_serving.py [--n 20000] [--d 64] \
       [--requests 32] [--pressure 16] [--shards 4] [--json BENCH_serving.json]
@@ -105,7 +109,7 @@ def stage_timings(index, cfg, queries):
 
 
 def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
-          churn=0, json_path=None):
+          churn=0, producers=0, deadline_ms=50.0, json_path=None):
     import dataclasses
 
     import jax
@@ -170,6 +174,41 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
         rows.append((f"engine-{shards}shard", sharded_s))
         sharded_t = sharded_engine.telemetry()
 
+    # --- async: N producer threads drive the background drain worker ------
+    # same request stream as the sync engine rows (the parity the tests
+    # pin), measured as one concurrent wall-clock window; per-request
+    # deadlines exercise the early-close path and the miss accounting
+    async_t = None
+    async_s = None
+    if producers > 0:
+        import threading
+
+        a_engine = ann.engine(
+            "single", cfg=cfg, max_batch=max(pressure, 1), async_mode=True,
+            default_deadline_s=deadline_ms / 1e3 if deadline_ms else None,
+        )
+        a_engine.search([AnnRequest(query=q) for q in qs[:pressure]])  # warm
+        a_engine.reset_telemetry()
+        n_p = min(producers, requests)
+        slices = [list(range(requests))[i::n_p] for i in range(n_p)]
+
+        def producer(idxs):
+            futures = [a_engine.submit(AnnRequest(query=qs[i])) for i in idxs]
+            for f in futures:
+                f.result(timeout=120.0)
+
+        threads = [threading.Thread(target=producer, args=(s,), daemon=True)
+                   for s in slices]
+        t0 = time.perf_counter()
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        async_s = time.perf_counter() - t0
+        rows.append((f"engine-async{n_p}p", async_s))
+        async_t = a_engine.telemetry()
+        a_engine.close()
+
     # --- churn: mixed query/insert/delete workload through a mutable
     # index (delta scan + tombstone mask + policy-driven compaction) ------
     churn_t = None
@@ -214,6 +253,14 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
               f"combine {sharded_t['combine_pairs_per_query']:.0f} pairs/query  "
               f"per-shard candidates/query "
               f"{[round(c) for c in sharded_t['shard_candidates_mean']]}")
+    if async_t is not None:
+        print(f"  async({min(producers, requests)} producers) "
+              f"p50 {async_t['latency_p50_s'] * 1e3:.2f} ms  "
+              f"p99 {async_t['latency_p99_s'] * 1e3:.2f} ms  "
+              f"queue peak {async_t['queue_depth_peak']}  "
+              f"early closes {async_t['batches_closed_early']}  "
+              f"deadline misses {async_t['deadline_misses']}  "
+              f"shed {async_t['shed']}")
     if churn_t is not None:
         ms = churn_t["mutable"]
         print(f"  churn p50 {churn_t['latency_p50_s'] * 1e3:.2f} ms  "
@@ -249,6 +296,21 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
                 "combine_pairs_per_query": sharded_t["combine_pairs_per_query"],
                 "shard_candidates_mean": sharded_t["shard_candidates_mean"],
             }
+        if async_t is not None:
+            payload["async"] = {
+                "producers": min(producers, requests),
+                "deadline_ms": deadline_ms,
+                "seconds": async_s,
+                "qps": requests / async_s,
+                "latency_p50_s": async_t["latency_p50_s"],
+                "latency_p99_s": async_t["latency_p99_s"],
+                "queue_depth_peak": async_t["queue_depth_peak"],
+                "batches_closed_early": async_t["batches_closed_early"],
+                "deadline_misses": async_t["deadline_misses"],
+                "shed": async_t["shed"],
+                "degraded": async_t["degraded"],
+                "async_vs_sync_qps": engine_s / async_s,
+            }
         if churn_t is not None:
             payload["churn"] = {
                 "per_wave_inserts": churn,
@@ -276,6 +338,13 @@ def main(argv=None):
                     help="also bench a mixed query/mutation workload: M "
                          "inserts + M//2 deletes per wave through a "
                          "MutableAnnIndex engine (policy compaction + swap)")
+    ap.add_argument("--producers", type=int, default=0, metavar="P",
+                    help="also bench the async pipeline: P concurrent "
+                         "producer threads submitting to the background "
+                         "drain worker (0 = skip)")
+    ap.add_argument("--deadline-ms", type=float, default=50.0, metavar="MS",
+                    help="per-request SLO for the async row (0 = none); "
+                         "misses and early batch closes are recorded")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", nargs="?", const="BENCH_serving.json",
                     default=None, metavar="PATH",
@@ -290,7 +359,8 @@ def main(argv=None):
         force_host_devices(args.shards)
     bench(n=args.n, d=args.d, k=args.k, requests=args.requests,
           pressure=args.pressure, shards=args.shards, seed=args.seed,
-          churn=args.churn, json_path=args.json)
+          churn=args.churn, producers=args.producers,
+          deadline_ms=args.deadline_ms, json_path=args.json)
 
 
 if __name__ == "__main__":

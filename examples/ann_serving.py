@@ -1,5 +1,8 @@
 """Minimal AnnServingEngine walkthrough: build an index, serve a mixed
-request stream (default / small-k / loose-beta), read the telemetry.
+request stream (default / small-k / loose-beta), read the telemetry, then
+switch to the async pipeline — per-request futures from the background
+drain worker, a deadline'd request, and admission control shedding past a
+queue watermark.
 
     PYTHONPATH=src python examples/ann_serving.py
 """
@@ -8,7 +11,7 @@ import numpy as np
 from repro.ann import AnnIndex
 from repro.core import taco_config
 from repro.data import gmm_dataset, make_queries
-from repro.serving import AnnRequest
+from repro.serving import AdmissionError, AnnRequest
 
 
 def main():
@@ -38,6 +41,49 @@ def main():
     assert engine.telemetry()["compiles_total"] == before
     print("second wave reused the compiled executable (no recompile)")
     assert all(np.all(r.ids[:1] >= 0) for r in results)
+
+    # --- async pipeline: futures, deadlines, admission control ------------
+    # the same engine kwargs via the facade; async_mode starts a background
+    # drain worker, so submit() is fire-and-forget and results arrive in
+    # AnnFutures (result(timeout=) / done() / add_done_callback)
+    with index.engine(max_batch=16, async_mode=True) as async_engine:
+        futures = [async_engine.submit(AnnRequest(query=q))
+                   for q in queries[:8]]
+        # a tight-SLO request: its batch closes early as the deadline nears,
+        # instead of lingering for stragglers
+        urgent = async_engine.submit(
+            AnnRequest(query=queries[8], deadline_s=0.05, priority=1)
+        )
+        done_flag = []
+        urgent.add_done_callback(lambda f: done_flag.append(f.request_id))
+        async_results = [f.result(timeout=30.0) for f in futures]
+        urgent.result(timeout=30.0)
+        assert done_flag == [urgent.request_id]
+        # async results match the synchronous path bitwise
+        for sync_r, async_r in zip(results[:8], async_results):
+            assert np.array_equal(sync_r.ids, async_r.ids)
+        at = async_engine.telemetry()
+        print(f"async: {at['requests_served']} served by the drain worker, "
+              f"queue peak {at['queue_depth_peak']}, "
+              f"deadline misses {at['deadline_misses']}")
+
+    # admission control: past max_queue_depth the engine sheds instead of
+    # queueing unboundedly (policy: reject | cache_only | degrade). No
+    # worker is running here, so the queue holds everything we submit.
+    shed_engine = index.engine(max_batch=16, max_queue_depth=4,
+                               admission_policy="reject")
+    accepted, shed = 0, 0
+    for q in queries[:8]:
+        try:
+            shed_engine.submit(AnnRequest(query=q))
+            accepted += 1
+        except AdmissionError:
+            shed += 1
+    shed_engine.drain()
+    st = shed_engine.telemetry()
+    print(f"admission: accepted {accepted}, shed {shed} "
+          f"(telemetry shed={st['shed']})")
+    assert (accepted, shed) == (4, 4) and st["shed"] == 4
 
 
 if __name__ == "__main__":

@@ -22,7 +22,6 @@ also how "compact to empty" behaves.
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time
 
 from repro.ann.index import AnnIndex
@@ -128,30 +127,50 @@ def _run_to_install(mutable, snap, vecs, ids, *, engine, reason, t0) -> Compacti
 
 class CompactionHandle:
     """A background compaction in flight: ``result()`` joins and returns
-    the :class:`CompactionReport` (re-raising any build failure)."""
+    the :class:`CompactionReport` (re-raising any build failure).
+
+    ``thread_name`` (once done) names the worker-pool thread the rebuild
+    ran on — the test surface for "compaction never runs on a caller's
+    thread"."""
 
     def __init__(self):
         self.report: CompactionReport | None = None
         self.error: BaseException | None = None
-        self._thread: threading.Thread | None = None
+        self._task = None  # repro.serving.scheduler.WorkTask
+
+    @property
+    def thread_name(self) -> str | None:
+        return None if self._task is None else self._task.thread_name
 
     def running(self) -> bool:
-        return self._thread is not None and self._thread.is_alive()
+        return self._task is not None and not self._task.done()
 
     def result(self, timeout: float | None = None) -> CompactionReport:
-        self._thread.join(timeout)
-        if self._thread.is_alive():
-            raise TimeoutError("compaction still running")
+        try:
+            self._task.result(timeout)
+        except TimeoutError:
+            raise TimeoutError("compaction still running") from None
+        except BaseException:
+            pass  # surfaced via self.error below, like the old API
         if self.error is not None:
             raise self.error
         return self.report
 
 
-def compact_async(mutable, *, engine=None, reason: str = "background") -> CompactionHandle:
-    """:func:`compact` on a daemon thread. The mutation log started
-    synchronously (before this returns), so every mutation from now until
-    the install is replayed onto the fresh base — callers keep inserting,
-    deleting and searching while the rebuild runs."""
+def compact_async(mutable, *, engine=None, reason: str = "background",
+                  pool=None) -> CompactionHandle:
+    """:func:`compact` as a task on a :class:`~repro.serving.scheduler.
+    WorkerPool` (default: the process-shared pool — the same one that hosts
+    engines' drain workers and recall probes, so an application gets one
+    bounded set of maintenance threads and the rebuild never runs on a
+    caller's serving thread). The mutation log starts synchronously
+    (before this returns), so every mutation from now until the install is
+    replayed onto the fresh base — callers keep inserting, deleting and
+    searching while the rebuild runs."""
+    # function-level import: repro.ann.__init__ -> compaction must not pull
+    # in repro.serving (which imports repro.ann.searcher) at import time
+    from repro.serving.scheduler import get_shared_pool
+
     handle = CompactionHandle()
     t0 = time.perf_counter()
     snap, vecs, ids = mutable._begin_compaction()  # sync: log starts NOW
@@ -163,9 +182,7 @@ def compact_async(mutable, *, engine=None, reason: str = "background") -> Compac
             )
         except BaseException as e:  # surface via result(), don't kill the app
             handle.error = e
+            raise
 
-    handle._thread = threading.Thread(
-        target=work, name="taco-compaction", daemon=True
-    )
-    handle._thread.start()
+    handle._task = (pool or get_shared_pool()).submit(work, label="compaction")
     return handle

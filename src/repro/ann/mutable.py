@@ -351,20 +351,24 @@ class MutableSearcher(Searcher):
         )
 
 
-def churn_wave(mutable, rng, live_ids, n_inserts: int, *, engine=None):
+def churn_wave(mutable, rng, live_ids, n_inserts: int, *, engine=None,
+               background: bool = False):
     """One synthetic mutation wave for churn drivers and benchmarks
     (``serve_ann --churn`` / ``bench_serving --churn`` share this, so both
     measure the same workload): insert ``n_inserts`` Gaussian rows, delete
     ``n_inserts // 2`` random earlier inserts (tracked in ``live_ids``,
     mutated in place), then let the policy decide on compaction. Returns
-    the :class:`~repro.ann.compaction.CompactionReport` or None."""
+    the :class:`~repro.ann.compaction.CompactionReport` (or, with
+    ``background=True``, the in-flight
+    :class:`~repro.ann.compaction.CompactionHandle` — the rebuild runs as
+    a shared-WorkerPool task while the caller keeps serving) or None."""
     fresh = rng.standard_normal((n_inserts, mutable.d)).astype(np.float32)
     live_ids.extend(int(i) for i in mutable.insert(fresh))
     kill = [live_ids.pop(rng.integers(len(live_ids)))
             for _ in range(min(n_inserts // 2, len(live_ids)))]
     if kill:
         mutable.delete(kill)
-    return mutable.maybe_compact(engine=engine)
+    return mutable.maybe_compact(engine=engine, background=background)
 
 
 class MutableAnnIndex:
@@ -439,7 +443,8 @@ class MutableAnnIndex:
             self._next_id += v.shape[0]
             if self._log is not None:
                 self._log.append(("insert", v, ids))
-            self._install(_state_insert(self._state, v, ids))
+            engines = self._install(_state_insert(self._state, v, ids))
+        self._notify_engines(engines)
         return ids
 
     def delete(self, ids) -> int:
@@ -451,25 +456,43 @@ class MutableAnnIndex:
             new = _state_delete(self._state, arr)  # raises before any change
             if self._log is not None:
                 self._log.append(("delete", arr.copy()))
-            self._install(new)
+            engines = self._install(new)
+        self._notify_engines(engines)
         return int(arr.size)
 
-    def _install(self, st: _State) -> None:
+    def _install(self, st: _State) -> list:
         """Atomically publish a new state snapshot (callers hold the lock)
-        and invalidate every attached engine's result cache — BEFORE any
-        request can observe the new state, so a cached pre-install answer
-        is never served against the post-install corpus."""
+        and return the attached live engines; the CALLER must pass them to
+        :meth:`_notify_engines` after releasing the lock.
+
+        Notifying outside the lock keeps the lock order one-way (mutable
+        lock -> engine lock would otherwise nest here, while the engine's
+        drain worker holds its own lock for batch formation). The cost is
+        a tiny window where a request can observe the new state before the
+        engine's result cache is invalidated — such a hit serves a
+        pre-install answer stamped with its (old) ``index_generation``, so
+        the consumer can tell; the engine's own generation guard still
+        prevents a result computed against the old state from entering the
+        cache after the notify lands."""
         self._state = st
         self.generation += 1
         self._mutations += 1
-        alive = []
+        alive, engines = [], []
         for ref in self._engines:
             eng = ref()
             if eng is None:
                 continue
             alive.append(ref)
-            eng.notify_index_mutated()
+            engines.append(eng)
         self._engines = alive
+        return engines
+
+    @staticmethod
+    def _notify_engines(engines: list) -> None:
+        """Invalidate attached engines (generation bump + cache drop);
+        called WITHOUT the mutable index's lock held."""
+        for eng in engines:
+            eng.notify_index_mutated()
 
     # -------------------------------------------------------------- query --
     def searcher(self, placement: str = "single") -> MutableSearcher:
@@ -596,11 +619,11 @@ class MutableAnnIndex:
                     st = _state_delete(st, op[1])
             self._log = None
             self._compactions += 1
-            # _install invalidates every attached engine's cache under the
-            # lock (no window where the new state serves old cached
-            # results); swap_index below additionally records the swap and
-            # re-binds an engine that was serving a DIFFERENT backend.
-            self._install(st)
+            engines = self._install(st)
+        # outside the lock: engine invalidation takes each engine's own
+        # lock (see _install); swap_index below additionally records the
+        # swap and re-binds an engine that was serving a DIFFERENT backend.
+        self._notify_engines(engines)
         if engine is not None:
             engine.swap_index(self.searcher(), cfg=self.cfg)
         return reclaimed, replayed

@@ -23,6 +23,17 @@ dev box the devices are forced via
 before jax initializes, so all jax-importing modules are imported inside
 ``main()`` after argument parsing.
 
+Async pipeline: ``--async`` starts the engine's background drain worker
+and drives it with ``--producers`` concurrent submitter threads — each
+``submit()`` returns an AnnFuture, batches form continuously off the
+producers' threads. ``--deadline-ms`` attaches a per-request SLO (batches
+close early as it nears; late results count as deadline misses),
+``--max-queue-depth``/``--admission`` turn on admission control (requests
+past the watermark are shed / served cache-only / degraded to a lower
+beta). Combined with ``--churn`` the mutation waves — and their
+policy-triggered compactions, now tasks on the shared WorkerPool — run
+concurrently with the producers across live engine swaps.
+
 Examples (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve_ann --n 20000 --d 64 \
       --requests 64 --pressure 16 --shards 4
@@ -30,6 +41,8 @@ Examples (CPU smoke):
       --save-index /tmp/taco_idx
   PYTHONPATH=src python -m repro.launch.serve_ann \
       --load-index /tmp/taco_idx --rerank masked_full
+  PYTHONPATH=src python -m repro.launch.serve_ann --n 20000 \
+      --async --producers 4 --deadline-ms 50 --churn 64
 """
 from __future__ import annotations
 
@@ -74,10 +87,29 @@ def main(argv=None):
     ap.add_argument("--recall-probe-every", type=int, default=0, metavar="N",
                     help="re-answer every Nth served request with exact kNN "
                          "over the live corpus; report live recall@k")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="serve through the background drain worker: "
+                         "--producers threads submit concurrently, each "
+                         "submit() returns an AnnFuture")
+    ap.add_argument("--producers", type=int, default=4, metavar="P",
+                    help="concurrent submitter threads for --async")
+    ap.add_argument("--deadline-ms", type=float, default=0.0, metavar="MS",
+                    help="per-request SLO: batches close early as it nears; "
+                         "late results count as deadline misses (0 = none)")
+    ap.add_argument("--max-queue-depth", type=int, default=0, metavar="N",
+                    help="admission watermark: past N queued requests the "
+                         "--admission policy applies (0 = unbounded)")
+    ap.add_argument("--admission", choices=["reject", "cache_only", "degrade"],
+                    default="reject",
+                    help="what to do past --max-queue-depth: shed with "
+                         "AdmissionError, serve cache hits only, or degrade "
+                         "to a lower-beta fast path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.pressure < 1:
         ap.error("--pressure must be >= 1")
+    if args.producers < 1:
+        ap.error("--producers must be >= 1")
     if args.shards < 0:
         ap.error("--shards must be >= 0")
     if args.churn and args.shards > 1:
@@ -147,6 +179,15 @@ def main(argv=None):
             beta = index.cfg.beta * 2
         reqs.append(AnnRequest(query=pool[i % pool.shape[0]], k=k, beta=beta))
 
+    serving_kwargs = dict(
+        max_batch=args.max_batch,
+        result_cache_size=args.result_cache,
+        recall_probe_every=args.recall_probe_every,
+        async_mode=args.async_mode,
+        default_deadline_s=args.deadline_ms / 1e3 if args.deadline_ms else None,
+        max_queue_depth=args.max_queue_depth,
+        admission_policy=args.admission,
+    )
     mutable = None
     if args.churn:
         from repro.ann import CompactionPolicy
@@ -155,16 +196,12 @@ def main(argv=None):
         mutable = index.mutable(
             policy=CompactionPolicy(max_delta_rows=max(8, 4 * args.churn))
         )
-        engine = mutable.engine(max_batch=args.max_batch,
-                                result_cache_size=args.result_cache,
-                                recall_probe_every=args.recall_probe_every)
+        engine = mutable.engine(**serving_kwargs)
     else:
         placement = "sharded" if args.shards > 1 else "single"
         engine = index.engine(placement,
                               shards=args.shards if args.shards > 1 else None,
-                              max_batch=args.max_batch,
-                              result_cache_size=args.result_cache,
-                              recall_probe_every=args.recall_probe_every)
+                              **serving_kwargs)
     # warm the steady-state executables, then serve in waves; the warm-up
     # queries overlap the measured stream, so drop their cached results
     # to keep the printed latency/QPS about the backend, not cache replay
@@ -174,13 +211,56 @@ def main(argv=None):
     churn_rng = np.random.default_rng(args.seed + 7)
     inserted: list[int] = []
     results = []
-    for lo in range(0, len(reqs), args.pressure):
+    shed = 0
+    if args.async_mode:
+        # concurrent producers drive the background drain worker; churn
+        # waves (and their pool-hosted compactions) run alongside them
+        import threading
+
+        from repro.serving import AdmissionError
+
+        n_p = min(args.producers, max(1, len(reqs)))
+        slices = [reqs[i::n_p] for i in range(n_p)]
+        out: list = [None] * n_p
+        shed_counts = [0] * n_p
+
+        def producer(i: int) -> None:
+            futures = []
+            for r in slices[i]:
+                try:
+                    futures.append(engine.submit(r))
+                except AdmissionError:
+                    shed_counts[i] += 1
+            out[i] = [f.result(timeout=120.0) for f in futures]
+
+        threads = [threading.Thread(target=producer, args=(i,), daemon=True)
+                   for i in range(n_p)]
+        for th in threads:
+            th.start()
         if mutable is not None:
-            # mixed workload: mutate between query waves, compact on policy
             from repro.ann.mutable import churn_wave
 
-            churn_wave(mutable, churn_rng, inserted, args.churn, engine=engine)
-        results.extend(engine.search(reqs[lo : lo + args.pressure]))
+            for _ in range(max(1, len(reqs) // args.pressure)):
+                handle = churn_wave(mutable, churn_rng, inserted, args.churn,
+                                    engine=engine, background=True)
+                if handle is not None:
+                    handle.result(timeout=300.0)  # pool task, not this thread
+        for th in threads:
+            th.join()
+        for chunk in out:
+            results.extend(chunk)
+        shed = sum(shed_counts)
+        engine.close()
+    else:
+        for lo in range(0, len(reqs), args.pressure):
+            if mutable is not None:
+                # mixed workload: mutate between query waves, compact on
+                # policy
+                from repro.ann.mutable import churn_wave
+
+                churn_wave(mutable, churn_rng, inserted, args.churn,
+                           engine=engine)
+            results.extend(engine.search(reqs[lo : lo + args.pressure]))
 
     t = engine.telemetry()
     print(f"served {len(results)} requests in {t['batches']} batches "
@@ -190,6 +270,18 @@ def main(argv=None):
           f"{t['queries_per_sec']:.0f} queries/s")
     print(f"  truncation rate {t['truncation_rate']:.3f}   "
           f"compiles {t['compiles_total']} {t['compiles_per_bucket']}")
+    if args.async_mode:
+        print(f"  async: {args.producers} producers   "
+              f"queue peak {t['queue_depth_peak']}   "
+              f"early closes {t['batches_closed_early']}   "
+              f"deadline misses {t['deadline_misses']}")
+        if args.max_queue_depth:
+            print(f"  admission[{args.admission}]: shed {t['shed']}   "
+                  f"degraded {t['degraded']}   "
+                  f"cache-only served {t['cache_only_served']}")
+            if shed != t["shed"]:
+                print(f"  WARNING: producers saw {shed} AdmissionErrors but "
+                      f"telemetry counted {t['shed']}")
     if args.result_cache:
         print(f"  result cache: {t['result_cache_hits']} hits / "
               f"{t['result_cache_misses']} misses "
@@ -198,7 +290,8 @@ def main(argv=None):
     if args.recall_probe_every:
         recall = t["live_recall_at_k"]
         print(f"  live recall@k {recall if recall is None else f'{recall:.4f}'}"
-              f" over {t['recall_probe_count']} probes")
+              f" over {t['recall_probe_count']} probes "
+              f"({t['recall_probe_skipped']} skipped: stale generation)")
     if mutable is not None:
         ms = t["mutable"]
         print(f"  mutable: {ms['n_live']} live ({ms['n_delta_live']} delta, "

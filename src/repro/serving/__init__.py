@@ -24,11 +24,18 @@ Two engines share the micro-batching helpers in
     in as a backend searcher for insert/delete/compaction churn. The
     lifecycle facade (:class:`repro.ann.AnnIndex` — build / save / load /
     searcher / engine / mutable) is the preferred way to construct all of
-    this.
+    this. The request path is asynchronous-capable: ``submit()`` returns
+    an :class:`AnnFuture`, ``async_mode=True`` runs a background drain
+    worker with deadline-aware batch close and admission control
+    (:class:`AdmissionError`), and maintenance work (compaction, recall
+    probes) runs on a shared :class:`WorkerPool`
+    (:mod:`repro.serving.scheduler`).
 """
 from repro.serving.ann_engine import (
+    AdmissionError,
     AnnBackend,
     AnnBatchResult,
+    AnnFuture,
     AnnRequest,
     AnnResult,
     AnnServingEngine,
@@ -36,10 +43,13 @@ from repro.serving.ann_engine import (
     SingleDeviceAnnBackend,
 )
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.scheduler import WorkerPool, WorkTask, get_shared_pool
 
 __all__ = [
+    "AdmissionError",
     "AnnBackend",
     "AnnBatchResult",
+    "AnnFuture",
     "AnnRequest",
     "AnnResult",
     "AnnServingEngine",
@@ -47,4 +57,7 @@ __all__ = [
     "ServingEngine",
     "ShardedAnnBackend",
     "SingleDeviceAnnBackend",
+    "WorkTask",
+    "WorkerPool",
+    "get_shared_pool",
 ]

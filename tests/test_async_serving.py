@@ -1,0 +1,464 @@
+"""Async request pipeline: futures, deadline-aware batching, admission
+control, and the shared WorkerPool.
+
+Pins the PR's acceptance criteria: async results bitwise-identical to the
+synchronous path, near-expired deadlines close batches early, admission
+sheds past the watermark with counts in telemetry(), and maintenance work
+(compaction, recall probes) runs on the shared WorkerPool — never on a
+caller's thread — across a live swap.
+"""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import build, query, taco_config
+from repro.serving import (
+    AdmissionError,
+    AnnFuture,
+    AnnRequest,
+    AnnServingEngine,
+    WorkerPool,
+    get_shared_pool,
+)
+
+TIMEOUT = 120.0  # generous: first use of a bucket compiles (seconds on CPU)
+
+
+@pytest.fixture(scope="module")
+def served_index(small_dataset):
+    data, queries, _gt_i, _gt_d = small_dataset
+    cfg = taco_config(n_subspaces=4, subspace_dim=8, n_clusters=256,
+                      alpha=0.05, beta=0.02, k=10)
+    return build(data, cfg), cfg, np.asarray(queries)
+
+
+# ------------------------------------------------------------ WorkerPool --
+def test_worker_pool_runs_tasks_off_caller_thread():
+    pool = WorkerPool(workers=2, name="t-pool")
+    me = threading.current_thread().name
+    tasks = [pool.submit(lambda i=i: i * i, label=f"sq{i}") for i in range(8)]
+    assert [t.result(timeout=10.0) for t in tasks] == [i * i for i in range(8)]
+    assert all(t.thread_name != me for t in tasks)
+    assert all(t.thread_name.startswith("t-pool-worker") for t in tasks)
+    assert pool.join(timeout=10.0)
+    s = pool.stats()
+    assert s["completed"] == 8 and s["failed"] == 0 and s["queued"] == 0
+    pool.shutdown(wait=True, timeout=10.0)
+    assert not pool.alive
+    with pytest.raises(RuntimeError):
+        pool.submit(lambda: None)
+
+
+def test_worker_pool_task_exception_and_callback():
+    pool = WorkerPool(workers=1)
+
+    def boom():
+        raise RuntimeError("kapow")
+
+    bad = pool.submit(boom, label="boom")
+    with pytest.raises(RuntimeError, match="kapow"):
+        bad.result(timeout=10.0)
+    assert isinstance(bad.exception(), RuntimeError)
+    # the worker survives a failing task
+    good = pool.submit(lambda: 42)
+    assert good.result(timeout=10.0) == 42
+    seen = []
+    good.add_done_callback(lambda t: seen.append(t.result()))
+    assert seen == [42]  # already done: callback runs immediately
+    assert pool.stats()["failed"] == 1
+    pool.shutdown(wait=True, timeout=10.0)
+
+
+def test_shared_pool_is_a_singleton_until_shutdown():
+    a = get_shared_pool()
+    assert get_shared_pool() is a
+    a.shutdown(wait=True, timeout=10.0)
+    b = get_shared_pool()  # a dead shared pool is replaced, not returned
+    assert b is not a and b.alive
+
+
+# -------------------------------------------------------------- futures --
+def test_future_int_compat_and_callbacks(served_index):
+    index, cfg, queries = served_index
+    engine = AnnServingEngine(index, cfg, max_batch=4)
+    fut = engine.submit(AnnRequest(query=queries[0]))
+    assert isinstance(fut, AnnFuture) and not fut.done()
+    seen = []
+    fut.add_done_callback(lambda f: seen.append(f.request_id))
+    out = engine.drain()
+    # the future IS the id: hashes/compares equal, indexes the drain dict
+    assert set(out) == {fut}
+    assert out[fut.request_id].ids.shape == (cfg.k,)
+    assert fut.done() and seen == [fut.request_id]
+    np.testing.assert_array_equal(fut.result().ids, out[fut.request_id].ids)
+    late = []
+    fut.add_done_callback(lambda f: late.append(True))
+    assert late == [True]  # done: runs immediately on the calling thread
+
+
+def test_future_result_timeout(served_index):
+    index, cfg, queries = served_index
+    engine = AnnServingEngine(index, cfg)
+    fut = engine.submit(AnnRequest(query=queries[0]))
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=0.01)  # nothing drains: still pending
+    engine.drain()
+    assert fut.result(timeout=0.01) is not None
+
+
+def test_search_preserves_other_callers_queued_requests(served_index):
+    """Regression: search() used to drain() everything and return only its
+    own rids, silently discarding other callers' queued results. Futures
+    keep them claimable."""
+    index, cfg, queries = served_index
+    engine = AnnServingEngine(index, cfg, max_batch=8)
+    early = engine.submit(AnnRequest(query=queries[0]))  # caller A queues
+    got = engine.search([AnnRequest(query=q) for q in queries[1:3]])  # caller B
+    assert len(got) == 2
+    # A's request was served along the way and its result is NOT lost:
+    assert early.done()
+    np.testing.assert_array_equal(
+        early.result().ids, np.asarray(query(index, queries[:1], cfg)[0])[0]
+    )
+    # ... and drain() still hands it out by request id
+    out = engine.drain()
+    assert set(out) == {early}
+    np.testing.assert_array_equal(out[early.request_id].ids, early.result().ids)
+
+
+# ------------------------------------------------------------ async mode --
+def test_async_results_bitwise_identical_to_sync(served_index):
+    """The same request stream through the background drain worker returns
+    bit-for-bit the results of the synchronous path."""
+    index, cfg, queries = served_index
+    sync_engine = AnnServingEngine(index, cfg, max_batch=8)
+    want = sync_engine.search([AnnRequest(query=q) for q in queries])
+
+    with AnnServingEngine(index, cfg, max_batch=8, async_mode=True) as engine:
+        assert engine.running
+        futures = [engine.submit(AnnRequest(query=q)) for q in queries]
+        got = [f.result(timeout=TIMEOUT) for f in futures]
+    assert not engine.running  # context exit stopped the worker
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w.ids, g.ids)
+        np.testing.assert_array_equal(w.dists, g.dists)
+        assert w.truncated == g.truncated
+    t = engine.telemetry()
+    assert t["requests_served"] == len(queries)
+    assert t["queue_depth"] == 0
+
+
+def test_async_search_adapter_and_close_drains(served_index):
+    index, cfg, queries = served_index
+    engine = AnnServingEngine(index, cfg, max_batch=4, async_mode=True)
+    try:
+        res = engine.search([AnnRequest(query=q) for q in queries[:4]],
+                            timeout=TIMEOUT)
+        want = np.asarray(query(index, queries[:4], cfg)[0])
+        np.testing.assert_array_equal(np.stack([r.ids for r in res]), want)
+        # close() serves whatever is still queued before stopping
+        tail = engine.submit(AnnRequest(query=queries[5]))
+    finally:
+        engine.close()
+    assert tail.done()
+    np.testing.assert_array_equal(
+        tail.result().ids, np.asarray(query(index, queries[5:6], cfg)[0])[0]
+    )
+
+
+def test_multi_producer_stress_no_lost_or_duplicated_requests(served_index):
+    """N threads submit concurrently; every future resolves, each result is
+    bitwise-identical to the single-producer sync reference for its query,
+    and the served counter is exact."""
+    index, cfg, queries = served_index
+    reference = AnnServingEngine(index, cfg, max_batch=16)
+    want = reference.search([AnnRequest(query=q) for q in queries])
+    by_query = {i: want[i] for i in range(len(queries))}
+
+    n_threads, per_thread = 6, 12
+    with AnnServingEngine(index, cfg, max_batch=16, async_mode=True) as engine:
+        results: dict[int, list] = {i: [] for i in range(n_threads)}
+        errors: list = []
+
+        def producer(tid: int) -> None:
+            try:
+                futs = []
+                for j in range(per_thread):
+                    qi = (tid * per_thread + j) % len(queries)
+                    futs.append((qi, engine.submit(AnnRequest(query=queries[qi]))))
+                for qi, f in futs:
+                    results[tid].append((qi, f.result(timeout=TIMEOUT)))
+            except BaseException as e:  # surface in the main thread
+                errors.append(e)
+
+        threads = [threading.Thread(target=producer, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(TIMEOUT)
+        assert not errors, errors
+        assert all(not t.is_alive() for t in threads)
+
+        for tid in range(n_threads):
+            assert len(results[tid]) == per_thread  # every future resolved
+            for qi, r in results[tid]:
+                np.testing.assert_array_equal(r.ids, by_query[qi].ids)
+                np.testing.assert_array_equal(r.dists, by_query[qi].dists)
+        t = engine.telemetry()
+        assert t["requests_served"] == n_threads * per_thread  # exact
+        assert t["queue_depth"] == 0
+        assert t["queue_depth_peak"] >= 1
+
+
+def test_concurrent_submit_cache_counters_exact(served_index):
+    """Telemetry hit/miss counters stay exact under concurrent submission:
+    N threads enqueue the same 8 queries, one drain serves them (all
+    misses), a second identical round is all hits."""
+    index, cfg, queries = served_index
+    engine = AnnServingEngine(index, cfg, max_batch=64, result_cache_size=64)
+    n_threads = 4
+
+    def submit_all():
+        for q in queries[:8]:
+            engine.submit(AnnRequest(query=q))
+
+    def run_round():
+        threads = [threading.Thread(target=submit_all) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(TIMEOUT)
+        return engine.drain()
+
+    first = run_round()
+    assert len(first) == n_threads * 8
+    t1 = engine.telemetry()
+    assert t1["result_cache_hits"] == 0
+    assert t1["result_cache_misses"] == n_threads * 8
+    second = run_round()
+    assert len(second) == n_threads * 8
+    t2 = engine.telemetry()
+    assert t2["result_cache_hits"] == n_threads * 8
+    assert t2["result_cache_misses"] == n_threads * 8
+    assert t2["requests_served"] == 2 * n_threads * 8  # hits + misses, exact
+
+
+# ------------------------------------------------- deadlines & priority --
+def test_near_deadline_closes_batch_early(served_index):
+    """With a long linger and a short per-request deadline, the batch must
+    close when the deadline nears — not when the linger expires."""
+    import time
+
+    index, cfg, queries = served_index
+    engine = AnnServingEngine(
+        index, cfg, max_batch=64, async_mode=True,
+        linger_s=30.0,  # would hold the batch ~forever
+        deadline_margin_s=0.005,
+    )
+    try:
+        # warm the executable so the measured request isn't a compile (the
+        # warm request needs a deadline too, or ITS batch would linger 30s)
+        engine.search([AnnRequest(query=queries[0], deadline_s=0.25)],
+                      timeout=TIMEOUT)
+        engine.reset_telemetry()
+        t0 = time.monotonic()
+        fut = engine.submit(AnnRequest(query=queries[1], deadline_s=0.25))
+        fut.result(timeout=TIMEOUT)
+        elapsed = time.monotonic() - t0
+    finally:
+        engine.close()
+    assert elapsed < 5.0, f"batch waited the linger, not the SLO ({elapsed=})"
+    t = engine.telemetry()
+    assert t["batches_closed_early"] == 1
+    assert t["requests_served"] == 1
+
+
+def test_deadline_miss_is_counted(served_index):
+    """A result delivered past its absolute deadline counts as a miss."""
+    index, cfg, queries = served_index
+    engine = AnnServingEngine(index, cfg, max_batch=4)
+    # sync path, unserved queue: the deadline expires before drain runs
+    engine.submit(AnnRequest(query=queries[0], deadline_s=1e-4))
+    import time
+
+    time.sleep(0.01)
+    engine.drain()
+    assert engine.telemetry()["deadline_misses"] == 1
+
+
+def test_priority_picks_the_next_group(served_index):
+    """The drain worker forms the next batch around the highest-priority
+    request, not simply the oldest."""
+    index, cfg, queries = served_index
+    engine = AnnServingEngine(index, cfg, max_batch=8)
+    engine.submit(AnnRequest(query=queries[0]))  # older, default group
+    engine.submit(AnnRequest(query=queries[1], beta=cfg.beta * 2, priority=5))
+    with engine._lock:
+        k, picked_cfg = engine._pick_group_locked()
+    assert picked_cfg.beta == pytest.approx(cfg.beta * 2)
+    engine.drain()  # both groups still get served
+    assert engine.telemetry()["requests_served"] == 2
+
+
+def test_submit_validates_deadline(served_index):
+    index, cfg, queries = served_index
+    engine = AnnServingEngine(index, cfg)
+    with pytest.raises(ValueError):
+        engine.submit(AnnRequest(query=queries[0], deadline_s=0.0))
+
+
+# ------------------------------------------------------ admission control --
+def test_admission_reject_sheds_past_watermark(served_index):
+    index, cfg, queries = served_index
+    engine = AnnServingEngine(index, cfg, max_batch=8, max_queue_depth=3,
+                              admission_policy="reject")
+    accepted = [engine.submit(AnnRequest(query=queries[i])) for i in range(3)]
+    for i in range(3, 6):
+        with pytest.raises(AdmissionError):
+            engine.submit(AnnRequest(query=queries[i]))
+    t = engine.telemetry()
+    assert t["shed"] == 3 and t["queue_depth"] == 3
+    out = engine.drain()  # accepted requests still serve normally
+    assert set(out) == set(accepted)
+    assert engine.telemetry()["requests_served"] == 3
+
+
+def test_admission_cache_only_serves_hits_and_sheds_misses(served_index):
+    index, cfg, queries = served_index
+    engine = AnnServingEngine(index, cfg, max_batch=8, result_cache_size=16,
+                              max_queue_depth=2,
+                              admission_policy="cache_only")
+    engine.search([AnnRequest(query=queries[0])])  # prime the cache
+    engine.submit(AnnRequest(query=queries[1]))  # fill the queue ...
+    engine.submit(AnnRequest(query=queries[2]))  # ... to the watermark
+    # past the watermark: a cached query is served instantly, cache-only
+    hit = engine.submit(AnnRequest(query=queries[0]))
+    assert hit.done() and hit.result().cached
+    # ... an uncached one is shed
+    with pytest.raises(AdmissionError):
+        engine.submit(AnnRequest(query=queries[3]))
+    t = engine.telemetry()
+    assert t["cache_only_served"] == 1 and t["shed"] == 1
+    engine.drain()
+
+
+def test_admission_degrade_lowers_beta(served_index):
+    index, cfg, queries = served_index
+    scale = 0.5
+    engine = AnnServingEngine(index, cfg, max_batch=8, max_queue_depth=1,
+                              admission_policy="degrade",
+                              degrade_beta_scale=scale)
+    normal = engine.submit(AnnRequest(query=queries[0]))
+    degraded = engine.submit(AnnRequest(query=queries[1]))  # past watermark
+    engine.drain()
+    t = engine.telemetry()
+    assert t["degraded"] == 1 and t["shed"] == 0
+    # the degraded request ran at beta * scale — pin against a direct query
+    want = query(index, queries[1:2],
+                 dataclasses.replace(cfg, beta=cfg.beta * scale))[0]
+    np.testing.assert_array_equal(degraded.result().ids, np.asarray(want)[0])
+    # the in-watermark request was NOT degraded
+    np.testing.assert_array_equal(
+        normal.result().ids, np.asarray(query(index, queries[:1], cfg)[0])[0]
+    )
+
+
+def test_admission_policy_validated(served_index):
+    index, cfg, _q = served_index
+    with pytest.raises(ValueError):
+        AnnServingEngine(index, cfg, admission_policy="bogus")
+    with pytest.raises(ValueError):
+        AnnServingEngine(index, cfg, degrade_beta_scale=0.0)
+
+
+# --------------------------------------------- maintenance on the pool --
+def test_recall_probes_run_on_pool_not_caller(served_index):
+    index, cfg, queries = served_index
+    engine = AnnServingEngine(index, cfg, max_batch=8, recall_probe_every=2)
+    engine.search([AnnRequest(query=q) for q in queries[:8]])
+    t = engine.telemetry()
+    assert t["recall_probe_count"] == 4
+    assert engine.probe_thread_names  # probes actually ran ...
+    me = threading.current_thread().name
+    for name in engine.probe_thread_names:  # ... and never on this thread
+        assert name != me and "worker" in name
+
+
+def test_churn_compaction_and_probes_on_pool_across_live_swap():
+    """Acceptance: concurrent producers drive an async mutable engine while
+    churn waves mutate and background-compact (a live swap_index());
+    every future resolves, and compaction + probes ran on the shared
+    WorkerPool — never on a producer's or the main thread."""
+    from repro.ann import CompactionPolicy, MutableAnnIndex
+    from repro.ann.mutable import churn_wave
+
+    rng = np.random.default_rng(0)
+    data = rng.integers(-8, 8, size=(512, 32)).astype(np.float32)
+    cfg = taco_config(n_subspaces=3, subspace_dim=8, n_clusters=64,
+                      kmeans_iters=4, alpha=0.1, beta=1.0,
+                      selection="fixed", k=10)
+    mutable = MutableAnnIndex.build(
+        data, cfg, policy=CompactionPolicy(max_delta_rows=24)
+    )
+    queries = rng.standard_normal((8, 32)).astype(np.float32) * 4
+    engine = mutable.engine(max_batch=8, async_mode=True,
+                            recall_probe_every=2)
+    caller_threads: set[str] = set()
+    try:
+        engine.search([AnnRequest(query=q) for q in queries],
+                      timeout=TIMEOUT)  # warm
+        resolved: list = []
+        errors: list = []
+
+        def producer(tid: int) -> None:
+            caller_threads.add(threading.current_thread().name)
+            try:
+                futs = [engine.submit(AnnRequest(query=q)) for q in queries]
+                resolved.extend(f.result(timeout=TIMEOUT) for f in futs)
+            except BaseException as e:
+                errors.append(e)
+
+        threads = [threading.Thread(target=producer, args=(i,))
+                   for i in range(3)]
+        for t in threads:
+            t.start()
+        # churn concurrently: each wave inserts 16 + deletes 8, so the
+        # policy (24 delta rows) triggers background compactions that
+        # swap_index() the live engine from a pool worker
+        caller_threads.add(threading.current_thread().name)
+        live_ids: list = []
+        handles = []
+        for _ in range(4):
+            h = churn_wave(mutable, rng, live_ids, 16, engine=engine,
+                           background=True)
+            if h is not None:
+                handles.append(h)
+                h.result(timeout=TIMEOUT)
+        for t in threads:
+            t.join(TIMEOUT)
+        assert not errors, errors
+        assert all(not t.is_alive() for t in threads)
+        assert len(resolved) == 3 * len(queries)  # every future resolved
+        assert all(r.ids.shape == (cfg.k,) for r in resolved)
+    finally:
+        engine.close()
+
+    assert handles, "policy never triggered a background compaction"
+    t = engine.telemetry()
+    assert t["index_swaps"] >= 1  # compaction swapped the live engine
+    assert t["index_generation"] > 0
+    # compaction ran on the shared pool, never on a caller's thread
+    for h in handles:
+        assert h.report is not None and h.error is None
+        assert h.thread_name not in caller_threads
+        assert "worker" in h.thread_name
+    # probes (counted or stale-skipped) also ran on pool workers only
+    assert engine.probe_thread_names
+    assert not (engine.probe_thread_names & caller_threads)
+    # served results stay consistent with the live corpus contract: every
+    # id the engine returned was live at that result's generation, so all
+    # ids are valid external ids (>= 0 given n_live >> k throughout)
+    assert all(np.all(r.ids >= 0) for r in resolved)
