@@ -3,10 +3,15 @@
 #
 #   scripts/verify.sh        — tier-1: the full suite (ROADMAP "Tier-1 verify")
 #   scripts/verify.sh fast   — skip @slow tests (subprocess dry-runs, meshes)
+#   scripts/verify.sh lint   — repo-specific static analysis gate
+#                              (repro.analysis.lint; pure stdlib, no jax)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+if [ "${1:-}" = "lint" ]; then
+  exec python -m repro.analysis.lint src tests
+fi
 if [ "${1:-}" = "fast" ]; then
   exec python -m pytest -x -q -m "not slow"
 fi

@@ -1,0 +1,28 @@
+"""Repo-specific correctness analysis for the concurrent serving stack.
+
+Two complementary checkers guard the invariants that keep TaCo query
+results bitwise-identical to the oracle across sharding, mutation and
+async serving (see ROADMAP):
+
+* :mod:`repro.analysis.lint` — an AST-based static pass
+  (``python -m repro.analysis.lint src tests``) with repo-specific rules:
+  the lock-acquisition graph over ``repro.serving``/``repro.ann`` must be
+  acyclic, no JAX dispatch or other blocking call inside a lock-held
+  region, ``time.time()`` never used for durations, thread/lock hygiene,
+  and no JAX computation at module import time. Findings carry rule
+  codes, can be allowlisted per line (``# noqa: B001``) or via the
+  committed ``lint_baseline.txt``, and gate CI.
+
+* :mod:`repro.analysis.lockcheck` — a runtime lock-order checker:
+  instrumented ``Lock``/``RLock``/``Condition`` wrappers record per-thread
+  acquisition chains into a global order graph and raise (with both
+  stacks) the moment two lock sites are ever taken in conflicting orders
+  — turning "the suite happened not to deadlock" into "no conflicting
+  order exists". Enabled for the whole pytest suite by default
+  (``REPRO_LOCKCHECK=0`` opts out); also counts time held across JAX
+  dispatch.
+
+Both are dependency-free at import (``lint`` is pure stdlib; ``lockcheck``
+touches ``jax`` only when installed), so the CI lint job runs before any
+heavy install.
+"""

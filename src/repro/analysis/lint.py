@@ -1,0 +1,1077 @@
+"""Repo-specific AST lint for the concurrent TaCo serving stack.
+
+Run::
+
+    python -m repro.analysis.lint src tests            # gate: exit 1 on findings
+    python -m repro.analysis.lint src tests --write-baseline
+
+Rules (each finding carries its code; allowlist per line with
+``# noqa: CODE`` — keep a justification in the same comment — or via the
+committed ``lint_baseline.txt``):
+
+====  ====================================================================
+L001  lock-order cycle: the static lock-acquisition graph (built from
+      ``with self._lock:`` bodies plus resolved call edges between the
+      analyzed classes) contains a cycle — two code paths can acquire the
+      same pair of locks in opposite orders, i.e. a potential deadlock.
+      This is the machine-checked form of PR-6's "one-way mutable ->
+      engine lock order" comment.
+L002  a non-reentrant ``Lock``/``Condition(Lock())`` is re-acquired inside
+      a region that already holds it: guaranteed self-deadlock.
+B001  blocking call in a lock-held region: JAX dispatch (any ``jax.``/
+      ``jnp.`` computation, ``block_until_ready``, applying a jitted
+      callable), ``Future``/``WorkTask.result()``, ``queue.get``,
+      ``time.sleep`` or thread ``join`` reached — directly or through
+      resolved calls — while a lock is held. A serving thread stalled
+      under a lock stalls every producer behind it.
+W001  ``time.time()`` used for durations/deadlines: wall clock steps on
+      NTP adjustment; use ``time.monotonic()`` (deadlines) or
+      ``time.perf_counter()`` (elapsed measurement).
+T001  ``threading.Thread`` that is neither ``daemon=True`` nor provably
+      ``join()``-ed in the surrounding scope: leaks at interpreter exit
+      or silently swallows its errors.
+T002  lock/condition created outside ``__init__``: lazy lock creation is
+      itself a data race (two threads can each create "the" lock).
+T003  bare ``except:``: swallows ``KeyboardInterrupt``/``SystemExit`` and
+      worker errors; catch ``Exception`` (or narrower).
+J001  ``jax``/``jnp`` computation at module import time: importing library
+      code must not initialize a backend or allocate device memory
+      (transforms like ``jax.jit``/``vmap`` and dtype constructors are
+      fine).
+E999  file does not parse.
+====  ====================================================================
+
+The analysis is deliberately repo-specific: call edges are resolved from
+constructor assignments, parameter/return annotations and property
+definitions of the classes in the analyzed tree (good enough to follow
+``engine._execute -> backend.run -> searcher.run_padded`` into a JAX
+dispatch), with a conservative name-match fallback. It is a gate on
+*this* codebase's invariants, not a general-purpose type checker.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import re
+import sys
+from pathlib import Path
+
+RULES = {
+    "L001": "lock-order cycle in the static acquisition graph",
+    "L002": "non-reentrant lock re-acquired while already held",
+    "B001": "blocking call / JAX dispatch in a lock-held region",
+    "W001": "time.time() used for durations or deadlines",
+    "T001": "thread neither daemon nor provably joined",
+    "T002": "lock created outside __init__",
+    "T003": "bare except",
+    "J001": "jax/jnp computation at module import time",
+    "E999": "syntax error",
+}
+
+# jax/jnp attributes whose *call* performs no device computation: function
+# transforms, registrations, dtype constructors, shape-only helpers.
+_JAX_SAFE = {
+    "jit", "pmap", "vmap", "grad", "value_and_grad", "jacfwd", "jacrev",
+    "custom_jvp", "custom_vjp", "custom_gradient", "checkpoint", "remat",
+    "named_scope", "named_call", "tree_util", "config", "typing", "dtypes",
+    "ShapeDtypeStruct", "eval_shape", "Array",
+    # dtype constructors (numpy scalar types re-exported by jnp)
+    "float16", "float32", "float64", "bfloat16", "int8", "int16", "int32",
+    "int64", "uint8", "uint16", "uint32", "uint64", "bool_", "complex64",
+    "complex128", "dtype",
+}
+
+# Method names too generic for name-match fallback call resolution (they
+# collide with list/dict/ndarray/str methods); typed resolution still
+# follows them when the receiver's class is known.
+_FALLBACK_SKIP = {
+    "append", "add", "extend", "insert", "remove", "pop", "popleft",
+    "popitem", "get", "update", "copy", "clear", "items", "keys", "values",
+    "setdefault", "move_to_end", "sort", "count", "index", "tolist",
+    "astype", "sum", "mean", "max", "min", "all", "any", "ravel",
+    "reshape", "start", "join", "result", "done", "wait", "wait_for",
+    "notify", "notify_all", "acquire", "release", "is_set", "set",
+    "is_alive", "close", "open", "read", "write", "flush", "encode",
+    "decode", "strip", "split", "replace", "format", "search", "run",
+    "get_ident",
+}
+
+_EXTERNAL_ROOTS = {
+    "threading", "np", "numpy", "time", "os", "sys", "math", "re",
+    "collections", "queue", "dataclasses", "weakref", "functools",
+    "itertools", "json", "pathlib", "traceback", "logging",
+}
+
+_MAX_CALL_DEPTH = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+# --------------------------------------------------------------- helpers --
+def _attr_chain(expr) -> list[str] | None:
+    """``a.b.c`` -> ["a","b","c"]; None when the root is not a plain Name."""
+    parts: list[str] = []
+    while isinstance(expr, ast.Attribute):
+        parts.append(expr.attr)
+        expr = expr.value
+    if isinstance(expr, ast.Name):
+        parts.append(expr.id)
+        return parts[::-1]
+    return None
+
+
+def _is_self_attr(expr) -> str | None:
+    if (
+        isinstance(expr, ast.Attribute)
+        and isinstance(expr.value, ast.Name)
+        and expr.value.id == "self"
+    ):
+        return expr.attr
+    return None
+
+
+def _ann_names(ann) -> list[str]:
+    """Identifiers mentioned by an annotation node or string."""
+    if ann is None:
+        return []
+    text = ann if isinstance(ann, str) else ast.unparse(ann)
+    return re.findall(r"[A-Za-z_][A-Za-z0-9_]*", text)
+
+
+# ----------------------------------------------------------------- model --
+@dataclasses.dataclass
+class LockNode:
+    qualname: str  # "AnnServingEngine._lock" / "scheduler._shared_lock"
+    reentrant: bool
+    path: str
+    line: int
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    name: str
+    qualname: str
+    node: ast.FunctionDef
+    module: "ModuleInfo"
+    cls: "ClassInfo | None" = None
+    is_property: bool = False
+
+    @property
+    def returns_names(self) -> list[str]:
+        return _ann_names(self.node.returns)
+
+    def arg_ann(self, name: str) -> list[str]:
+        for a in self.node.args.args + self.node.args.kwonlyargs:
+            if a.arg == name:
+                return _ann_names(a.annotation)
+        return []
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    name: str
+    module: "ModuleInfo"
+    node: ast.ClassDef
+    base_names: list[str]
+    methods: dict[str, FuncInfo] = dataclasses.field(default_factory=dict)
+    properties: set[str] = dataclasses.field(default_factory=set)
+    lock_attrs: dict[str, LockNode] = dataclasses.field(default_factory=dict)
+    # attr -> annotation-ish name list resolved lazily against the project
+    attr_types: dict[str, list[str]] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    path: Path
+    shown: str  # path as rendered in findings
+    name: str  # stem, for module-lock qualnames
+    tree: ast.Module
+    lines: list[str]
+    functions: dict[str, FuncInfo] = dataclasses.field(default_factory=dict)
+    classes: dict[str, ClassInfo] = dataclasses.field(default_factory=dict)
+    module_locks: dict[str, LockNode] = dataclasses.field(default_factory=dict)
+    # local name -> ("module", dotted) or ("symbol", module_dotted, symbol)
+    imports: dict[str, tuple] = dataclasses.field(default_factory=dict)
+
+
+class Project:
+    """Cross-file symbol model for the analyzed tree."""
+
+    def __init__(self):
+        self.modules: list[ModuleInfo] = []
+        self.class_index: dict[str, list[ClassInfo]] = {}
+        self.func_index: dict[str, list[FuncInfo]] = {}
+        self.method_index: dict[str, list[FuncInfo]] = {}
+
+    # ------------------------------------------------------------ loading --
+    def add_module(self, mod: ModuleInfo) -> None:
+        self.modules.append(mod)
+        for node in mod.tree.body:
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                self._record_import(mod, node)
+            elif isinstance(node, ast.FunctionDef):
+                fi = FuncInfo(node.name, f"{mod.name}.{node.name}", node, mod)
+                mod.functions[node.name] = fi
+                self.func_index.setdefault(node.name, []).append(fi)
+            elif isinstance(node, ast.ClassDef):
+                self._record_class(mod, node)
+            elif isinstance(node, ast.Assign):
+                self._record_module_lock(mod, node)
+
+    @staticmethod
+    def _record_import(mod: ModuleInfo, node) -> None:
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                mod.imports[a.asname or a.name.split(".")[0]] = ("module", a.name)
+        else:
+            base = node.module or ""
+            for a in node.names:
+                mod.imports[a.asname or a.name] = ("symbol", base, a.name)
+
+    def _record_class(self, mod: ModuleInfo, node: ast.ClassDef) -> None:
+        bases = []
+        for b in node.bases:
+            chain = _attr_chain(b)
+            if chain:
+                bases.append(chain[-1])
+        ci = ClassInfo(node.name, mod, node, bases)
+        mod.classes[node.name] = ci
+        self.class_index.setdefault(node.name, []).append(ci)
+        for item in node.body:
+            if not isinstance(item, ast.FunctionDef):
+                continue
+            is_prop = any(
+                (isinstance(d, ast.Name) and d.id == "property")
+                or (isinstance(d, ast.Attribute) and d.attr in ("getter", "setter"))
+                for d in item.decorator_list
+            )
+            fi = FuncInfo(
+                item.name, f"{ci.name}.{item.name}", item, mod, ci, is_prop
+            )
+            ci.methods[item.name] = fi
+            if is_prop:
+                ci.properties.add(item.name)
+            self.method_index.setdefault(item.name, []).append(fi)
+        for meth in ci.methods.values():
+            self._scan_attrs(ci, meth)
+
+    # --- lock attribute + attr-type discovery ------------------------------
+    def _lock_factory(self, mod: ModuleInfo, call) -> tuple[str, bool] | None:
+        """(kind, reentrant) when ``call`` constructs a threading lock."""
+        if not isinstance(call, ast.Call):
+            return None
+        chain = _attr_chain(call.func)
+        if not chain:
+            return None
+        name = chain[-1]
+        if name not in ("Lock", "RLock", "Condition"):
+            return None
+        rooted = len(chain) >= 2 and chain[0] == "threading"
+        imported = (
+            len(chain) == 1
+            and mod.imports.get(name, ("",))[0] == "symbol"
+            and mod.imports[name][1] == "threading"
+        )
+        if not (rooted or imported):
+            return None
+        if name == "Lock":
+            return ("Lock", False)
+        if name == "RLock":
+            return ("RLock", True)
+        # Condition: reentrancy follows the underlying lock (default RLock)
+        if call.args:
+            inner = self._lock_factory(mod, call.args[0])
+            if inner is not None:
+                return ("Condition", inner[1])
+            return None  # Condition(self._x): alias, handled by caller
+        return ("Condition", True)
+
+    def _scan_attrs(self, ci: ClassInfo, meth: FuncInfo) -> None:
+        mod = ci.module
+        for node in ast.walk(meth.node):
+            if isinstance(node, ast.AnnAssign):
+                attr = _is_self_attr(node.target)
+                if attr:
+                    ci.attr_types.setdefault(attr, _ann_names(node.annotation))
+                continue
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            attr = _is_self_attr(node.targets[0])
+            if attr is None:
+                continue
+            val = node.value
+            fac = self._lock_factory(mod, val) if isinstance(val, ast.Call) else None
+            if fac is not None:
+                ci.lock_attrs.setdefault(
+                    attr,
+                    LockNode(f"{ci.name}.{attr}", fac[1], mod.shown, node.lineno),
+                )
+                continue
+            if isinstance(val, ast.Call):
+                chain = _attr_chain(val.func)
+                if chain and chain[-1] == "Condition" and val.args:
+                    alias = _is_self_attr(val.args[0])
+                    if alias and alias in ci.lock_attrs:
+                        ci.lock_attrs.setdefault(attr, ci.lock_attrs[alias])
+                        continue
+                # self.x = ClassName(...) / self.x = fn(...) with returns ann
+                if chain:
+                    ci.attr_types.setdefault(attr, [chain[-1]])
+            elif isinstance(val, ast.Name):
+                # self.x = param  (annotated on the enclosing signature)
+                ann = meth.arg_ann(val.id)
+                if ann:
+                    ci.attr_types.setdefault(attr, ann)
+
+    def _record_module_lock(self, mod: ModuleInfo, node: ast.Assign) -> None:
+        if len(node.targets) != 1 or not isinstance(node.targets[0], ast.Name):
+            return
+        fac = self._lock_factory(mod, node.value)
+        if fac is not None:
+            name = node.targets[0].id
+            mod.module_locks[name] = LockNode(
+                f"{mod.name}.{name}", fac[1], mod.shown, node.lineno
+            )
+
+    # --------------------------------------------------------- resolution --
+    def find_class(self, names: list[str], _depth: int = 0) -> ClassInfo | None:
+        for n in names:
+            hits = self.class_index.get(n)
+            if hits:
+                return hits[0]
+        if _depth < 3:
+            # ``self.x = make_thing(...)`` records the factory's name: chase
+            # the project function's return annotation.
+            for n in names:
+                for fi in self.func_index.get(n, ()):
+                    found = self.find_class(fi.returns_names, _depth + 1)
+                    if found is not None:
+                        return found
+        return None
+
+    def mro_lookup(self, ci: ClassInfo, meth: str) -> FuncInfo | None:
+        seen = set()
+        stack = [ci]
+        while stack:
+            c = stack.pop(0)
+            if c.name in seen:
+                continue
+            seen.add(c.name)
+            if meth in c.methods:
+                return c.methods[meth]
+            for b in c.base_names:
+                stack.extend(self.class_index.get(b, ()))
+        return None
+
+    def subclasses(self, ci: ClassInfo) -> list[ClassInfo]:
+        out, frontier = [], {ci.name}
+        changed = True
+        while changed:
+            changed = False
+            for lst in self.class_index.values():
+                for c in lst:
+                    if c in out:
+                        continue
+                    if frontier & set(c.base_names):
+                        out.append(c)
+                        frontier.add(c.name)
+                        changed = True
+        return out
+
+    def resolve_method(self, ci: ClassInfo, meth: str) -> list[FuncInfo]:
+        """Definition in ``ci``'s MRO plus every subclass override
+        (conservative virtual dispatch)."""
+        base = self.mro_lookup(ci, meth)
+        if base is None:
+            return []
+        out = [base]
+        for sub in self.subclasses(base.cls if base.cls else ci):
+            if meth in sub.methods and sub.methods[meth] is not base:
+                out.append(sub.methods[meth])
+        return out
+
+
+# -------------------------------------------------- lock / blocking walk --
+class _Ctx:
+    __slots__ = ("func", "local_types")
+
+    def __init__(self, func: FuncInfo, local_types: dict):
+        self.func = func
+        self.local_types = local_types
+
+
+class LockAnalysis:
+    """Builds the acquisition graph and the B001/L002 findings."""
+
+    def __init__(self, project: Project):
+        self.p = project
+        # (a, b) -> (path, line, via) : a held while b acquired
+        self.edges: dict[tuple[str, str], tuple[str, int, str]] = {}
+        self.nodes: dict[str, LockNode] = {}
+        self.findings: list[Finding] = []
+        self._reported: set[tuple] = set()
+
+    # ------------------------------------------------------------- typing --
+    def _local_types(self, fi: FuncInfo) -> dict[str, object]:
+        types: dict[str, object] = {}
+        for node in ast.walk(fi.node):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+                continue
+            tgt = node.targets[0]
+            if not isinstance(tgt, ast.Name) or not isinstance(node.value, ast.Call):
+                continue
+            chain = _attr_chain(node.value.func)
+            if not chain:
+                continue
+            if chain[0] in _EXTERNAL_ROOTS:
+                types[tgt.id] = "<external>"
+                continue
+            cls = self.p.find_class([chain[-1]])
+            if cls is not None:
+                types[tgt.id] = cls
+        return types
+
+    def _infer_receiver(self, expr, ctx: _Ctx):
+        """ClassInfo, "<external>" or None for the receiver expression."""
+        if isinstance(expr, ast.Name):
+            if expr.id == "self":
+                return ctx.func.cls
+            t = ctx.local_types.get(expr.id)
+            if t is not None:
+                return t
+            ann = ctx.func.arg_ann(expr.id)
+            if ann:
+                return self.p.find_class(ann)
+            return None
+        if isinstance(expr, ast.Attribute):
+            attr = _is_self_attr(expr)
+            if attr and ctx.func.cls is not None:
+                ci = ctx.func.cls
+                if attr in ci.properties:
+                    prop = self.p.mro_lookup(ci, attr)
+                    if prop is not None:
+                        return self.p.find_class(prop.returns_names)
+                if attr in ci.attr_types:
+                    return self.p.find_class(ci.attr_types[attr])
+            chain = _attr_chain(expr)
+            if chain and chain[0] in _EXTERNAL_ROOTS:
+                return "<external>"
+            return None
+        if isinstance(expr, ast.Call):
+            targets = self._resolve_call_func(expr.func, ctx)
+            for t in targets:
+                if isinstance(t, ClassInfo):
+                    return t
+                found = self.p.find_class(t.returns_names)
+                if found is not None:
+                    return found
+            chain = _attr_chain(expr.func)
+            if chain and chain[0] in _EXTERNAL_ROOTS:
+                return "<external>"
+        return None
+
+    def _resolve_call_func(self, func, ctx: _Ctx) -> list:
+        """Call targets: FuncInfo entries and/or ClassInfo (constructor)."""
+        if isinstance(func, ast.Name):
+            name = func.id
+            mod = ctx.func.module
+            if name in ctx.local_types:
+                return []  # calling a local object: unknown callable
+            if name in mod.functions:
+                return [mod.functions[name]]
+            if name in mod.classes:
+                return [mod.classes[name]]
+            imp = mod.imports.get(name)
+            if imp and imp[0] == "symbol":
+                sym = imp[2]
+                for fi in self.p.func_index.get(sym, ()):
+                    return [fi]
+                hits = self.p.class_index.get(sym)
+                if hits:
+                    return [hits[0]]
+            return []
+        if isinstance(func, ast.Attribute):
+            meth = func.attr
+            recv = self._infer_receiver(func.value, ctx)
+            if recv == "<external>":
+                return []
+            if isinstance(recv, ClassInfo):
+                return self.p.resolve_method(recv, meth)
+            # fallback: name match across analyzed classes, skipping names
+            # that collide with builtin container/str/ndarray methods
+            if meth in _FALLBACK_SKIP:
+                return []
+            return list(self.p.method_index.get(meth, ()))
+        return []
+
+    @staticmethod
+    def _callables(targets) -> list[FuncInfo]:
+        out = []
+        for t in targets:
+            if isinstance(t, ClassInfo):
+                init = t.methods.get("__init__")
+                if init is not None:
+                    out.append(init)
+            else:
+                out.append(t)
+        return out
+
+    # ----------------------------------------------------------- blocking --
+    def _blocking_reason(self, call: ast.Call, ctx: _Ctx) -> str | None:
+        func = call.func
+        if isinstance(func, ast.Call):
+            inner = _attr_chain(func.func)
+            if inner and inner[0] in ("jax", "jnp"):
+                return f"applies a {'.'.join(inner)} transform result (JAX dispatch)"
+            return None
+        chain = _attr_chain(func)
+        if not chain:
+            return None
+        root, attr = chain[0], chain[-1]
+        dotted = ".".join(chain)
+        if root in ("jax", "jnp"):
+            if len(chain) >= 2 and chain[1] in _JAX_SAFE:
+                return None
+            return f"{dotted}() is JAX dispatch"
+        if attr == "block_until_ready":
+            return f"{dotted}() blocks on device work"
+        if root == "time" and attr == "sleep":
+            return "time.sleep() under a lock stalls every waiter"
+        if attr == "result" and len(chain) >= 2:
+            return f"{dotted}() blocks on a future/task"
+        if attr == "get" and len(chain) >= 2 and "queue" in chain[-2].lower():
+            return f"{dotted}() blocks on a queue"
+        if attr == "join" and len(chain) >= 2 and any(
+            h in chain[-2].lower() for h in ("thread", "worker", "pool")
+        ):
+            return f"{dotted}() joins a thread"
+        return None
+
+    # --------------------------------------------------------------- walk --
+    def _lock_of(self, expr, ctx: _Ctx) -> LockNode | None:
+        attr = _is_self_attr(expr)
+        if attr and ctx.func.cls is not None and attr in ctx.func.cls.lock_attrs:
+            return ctx.func.cls.lock_attrs[attr]
+        if isinstance(expr, ast.Name):
+            return ctx.func.module.locks_visible(expr.id)
+        return None
+
+    def walk_all(self) -> None:
+        for mod in self.p.modules:
+            for fi in mod.functions.values():
+                self._walk_entry(fi)
+            for ci in mod.classes.values():
+                for fi in ci.methods.values():
+                    self._walk_entry(fi)
+
+    def _walk_entry(self, fi: FuncInfo) -> None:
+        ctx = _Ctx(fi, self._local_types(fi))
+        for stmt in fi.node.body:
+            self._visit(stmt, (), ctx, entry=None, chain=(), depth=0,
+                        visited=set())
+
+    def _visit(self, node, held, ctx: _Ctx, *, entry, chain, depth, visited):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return  # nested defs run later, not in this lock region
+        if isinstance(node, ast.With):
+            acquired = []
+            for item in node.items:
+                lock = self._lock_of(item.context_expr, ctx)
+                if lock is None:
+                    self._visit(item.context_expr, held, ctx, entry=entry,
+                                chain=chain, depth=depth, visited=visited)
+                    continue
+                self.nodes[lock.qualname] = lock
+                if any(h.qualname == lock.qualname for h in held):
+                    if not lock.reentrant:
+                        self._report(
+                            ctx, node.lineno, node.col_offset, "L002",
+                            f"non-reentrant lock {lock.qualname} re-acquired "
+                            f"while already held in {ctx.func.qualname}"
+                            + (f" (via {' -> '.join(chain)})" if chain else ""),
+                            entry,
+                        )
+                    continue  # reentrant re-acquire: no new node, no edge
+                for h in held:
+                    key = (h.qualname, lock.qualname)
+                    if key not in self.edges:
+                        hops = chain if chain and chain[-1] == ctx.func.qualname \
+                            else chain + (ctx.func.qualname,)
+                        site = entry or (ctx.func.module.shown, node.lineno)
+                        self.edges[key] = (site[0], site[1], " -> ".join(hops))
+                acquired.append(lock)
+                held = held + (lock,)
+            for stmt in node.body:
+                self._visit(stmt, held, ctx, entry=entry, chain=chain,
+                            depth=depth, visited=visited)
+            return
+        if isinstance(node, ast.Call):
+            self._handle_call(node, held, ctx, entry=entry, chain=chain,
+                              depth=depth, visited=visited)
+            return
+        if isinstance(node, ast.Attribute) and held:
+            # property access runs code: follow it like a zero-arg call
+            attr = _is_self_attr(node)
+            if attr and ctx.func.cls is not None and attr in ctx.func.cls.properties:
+                prop = self.p.mro_lookup(ctx.func.cls, attr)
+                if prop is not None:
+                    self._recurse(prop, node, held, ctx, entry=entry,
+                                  chain=chain, depth=depth, visited=visited)
+        for child in ast.iter_child_nodes(node):
+            self._visit(child, held, ctx, entry=entry, chain=chain,
+                        depth=depth, visited=visited)
+
+    def _handle_call(self, call, held, ctx: _Ctx, *, entry, chain, depth,
+                     visited):
+        # arguments (and the receiver expression) first
+        for child in ast.iter_child_nodes(call):
+            self._visit(child, held, ctx, entry=entry, chain=chain,
+                        depth=depth, visited=visited)
+        if not held:
+            return
+        reason = self._blocking_reason(call, ctx)
+        if reason is not None:
+            locks = ", ".join(h.qualname for h in held)
+            msg = f"{reason} while holding {locks}"
+            if chain:
+                msg += f" (reached via {' -> '.join(chain)})"
+            self._report(ctx, call.lineno, call.col_offset, "B001", msg, entry)
+            return
+        if depth >= _MAX_CALL_DEPTH:
+            return
+        # skip wait/notify on a held condition — wait releases the lock
+        fchain = _attr_chain(call.func)
+        if fchain and fchain[-1] in ("wait", "wait_for", "notify", "notify_all"):
+            return
+        for target in self._callables(self._resolve_call_func(call.func, ctx)):
+            self._recurse(target, call, held, ctx, entry=entry, chain=chain,
+                          depth=depth, visited=visited)
+
+    def _recurse(self, target: FuncInfo, site, held, ctx: _Ctx, *, entry,
+                 chain, depth, visited):
+        if depth >= _MAX_CALL_DEPTH:
+            return
+        key = (target.qualname, frozenset(h.qualname for h in held))
+        if key in visited:
+            return
+        visited.add(key)
+        sub_entry = entry or (ctx.func.module.shown, site.lineno,
+                              site.col_offset)
+        sub_ctx = _Ctx(target, self._local_types(target))
+        for stmt in target.node.body:
+            self._visit(stmt, held, sub_ctx, entry=sub_entry,
+                        chain=chain + (target.qualname,), depth=depth + 1,
+                        visited=visited)
+
+    def _report(self, ctx: _Ctx, line, col, code, message, entry) -> None:
+        if entry is not None:
+            path, line = entry[0], entry[1]
+            col = entry[2] if len(entry) > 2 else 0
+        else:
+            path = ctx.func.module.shown
+        key = (path, line, code)
+        if key in self._reported:
+            return
+        self._reported.add(key)
+        self.findings.append(Finding(path, line, col, code, message))
+
+    # --------------------------------------------------------- cycle scan --
+    def cycle_findings(self) -> list[Finding]:
+        graph: dict[str, set[str]] = {}
+        for (a, b) in self.edges:
+            graph.setdefault(a, set()).add(b)
+            graph.setdefault(b, set())
+        # Tarjan SCC
+        index: dict[str, int] = {}
+        low: dict[str, int] = {}
+        stack: list[str] = []
+        on: set[str] = set()
+        sccs: list[list[str]] = []
+        counter = [0]
+
+        def strongconnect(v):
+            index[v] = low[v] = counter[0]
+            counter[0] += 1
+            stack.append(v)
+            on.add(v)
+            for w in graph[v]:
+                if w not in index:
+                    strongconnect(w)
+                    low[v] = min(low[v], low[w])
+                elif w in on:
+                    low[v] = min(low[v], index[w])
+            if low[v] == index[v]:
+                comp = []
+                while True:
+                    w = stack.pop()
+                    on.discard(w)
+                    comp.append(w)
+                    if w == v:
+                        break
+                sccs.append(comp)
+
+        sys.setrecursionlimit(max(sys.getrecursionlimit(), 10000))
+        for v in graph:
+            if v not in index:
+                strongconnect(v)
+        out = []
+        for comp in sccs:
+            if len(comp) < 2:
+                continue
+            members = set(comp)
+            cyc_edges = sorted(
+                (a, b) for (a, b) in self.edges
+                if a in members and b in members
+            )
+            detail = "; ".join(
+                f"{a} -> {b} at {self.edges[(a, b)][0]}:{self.edges[(a, b)][1]}"
+                f" (in {self.edges[(a, b)][2]})"
+                for a, b in cyc_edges
+            )
+            first = cyc_edges[0]
+            path, line, _via = self.edges[first]
+            out.append(Finding(
+                path, line, 0, "L001",
+                f"lock-order cycle among {{{', '.join(sorted(members))}}}: "
+                f"{detail} — two paths can deadlock; make the order one-way "
+                f"(acquire outside the lock or drop to a notification list)",
+            ))
+        return out
+
+
+# Give ModuleInfo a method used by the walker (defined after the class for
+# dataclass field ordering simplicity).
+def _locks_visible(self: ModuleInfo, name: str) -> LockNode | None:
+    if name in self.module_locks:
+        return self.module_locks[name]
+    imp = self.imports.get(name)
+    if imp and imp[0] == "symbol":
+        return None  # imported module-level locks resolved only in-module
+    return None
+
+
+ModuleInfo.locks_visible = _locks_visible
+
+
+# ----------------------------------------------------------- file checks --
+def _runtime_node_ids(tree: ast.Module) -> set[int]:
+    """ids of nodes that execute at call time, not at import time."""
+    out: set[int] = set()
+    for node in ast.walk(tree):
+        bodies = []
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            bodies = node.body
+        elif isinstance(node, ast.Lambda):
+            bodies = [node.body]
+        for b in bodies:
+            for ch in ast.walk(b):
+                out.add(id(ch))
+    return out
+
+
+def _enclosing_map(tree: ast.Module) -> dict[int, ast.AST]:
+    """node id -> nearest enclosing FunctionDef/ClassDef (or the module)."""
+    out: dict[int, ast.AST] = {}
+
+    def visit(node, scope):
+        for ch in ast.iter_child_nodes(node):
+            out[id(ch)] = scope
+            new_scope = ch if isinstance(
+                ch, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+            ) else scope
+            visit(ch, new_scope)
+
+    visit(tree, tree)
+    return out
+
+
+def _file_findings(mod: ModuleInfo, project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    tree = mod.tree
+    runtime = _runtime_node_ids(tree)
+    enclosing = _enclosing_map(tree)
+
+    def thread_ctor(call: ast.Call) -> bool:
+        chain = _attr_chain(call.func)
+        if not chain or chain[-1] != "Thread":
+            return False
+        if len(chain) >= 2 and chain[0] == "threading":
+            return True
+        imp = mod.imports.get("Thread")
+        return len(chain) == 1 and imp is not None and imp[0] == "symbol" \
+            and imp[1] == "threading"
+
+    def has_join(scope) -> bool:
+        for n in ast.walk(scope):
+            if (
+                isinstance(n, ast.Call)
+                and isinstance(n.func, ast.Attribute)
+                and n.func.attr == "join"
+                and not isinstance(n.func.value, ast.Constant)
+            ):
+                return True
+        return False
+
+    for node in ast.walk(tree):
+        # T003: bare except
+        if isinstance(node, ast.ExceptHandler) and node.type is None:
+            findings.append(Finding(
+                mod.shown, node.lineno, node.col_offset, "T003",
+                "bare except: swallows KeyboardInterrupt/SystemExit and "
+                "worker errors; catch Exception (or narrower)",
+            ))
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        # W001: wall clock for durations
+        is_time_time = chain == ["time", "time"] or (
+            chain == ["time"]
+            and mod.imports.get("time", ("",))[0] == "symbol"
+            and mod.imports["time"][1] == "time"
+        )
+        if is_time_time:
+            findings.append(Finding(
+                mod.shown, node.lineno, node.col_offset, "W001",
+                "time.time() is wall-clock (steps under NTP): use "
+                "time.monotonic() for deadlines, time.perf_counter() for "
+                "elapsed measurement",
+            ))
+            continue
+        # T001: threads must be daemon or joined
+        if thread_ctor(node):
+            daemon = next(
+                (kw.value for kw in node.keywords if kw.arg == "daemon"), None
+            )
+            if isinstance(daemon, ast.Constant) and daemon.value:
+                continue
+            if daemon is not None:
+                continue  # dynamic daemon flag: assume deliberate
+            scope = enclosing.get(id(node), tree)
+            while scope is not tree and not isinstance(
+                scope, (ast.FunctionDef, ast.AsyncFunctionDef)
+            ):
+                scope = enclosing.get(id(scope), tree)
+            search = scope if scope is not tree else tree
+            if isinstance(search, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # a thread stored on self may be joined by a sibling method
+                owner = enclosing.get(id(search), tree)
+                joined = has_join(search) or (
+                    isinstance(owner, ast.ClassDef) and has_join(owner)
+                )
+            else:
+                joined = has_join(search)
+            if not joined:
+                findings.append(Finding(
+                    mod.shown, node.lineno, node.col_offset, "T001",
+                    "threading.Thread is neither daemon=True nor join()-ed "
+                    "in the surrounding scope: it can outlive the program "
+                    "or silently swallow errors",
+                ))
+            continue
+        # J001: jax computation at import time
+        if id(node) not in runtime and chain and chain[0] in ("jax", "jnp"):
+            safe = len(chain) >= 2 and chain[1] in _JAX_SAFE
+            if not safe:
+                findings.append(Finding(
+                    mod.shown, node.lineno, node.col_offset, "J001",
+                    f"{'.'.join(chain)}() runs JAX computation at module "
+                    f"import time: move it inside a function (imports must "
+                    f"not initialize a backend or allocate device memory)",
+                ))
+    # T002: lock created outside __init__
+    for ci in mod.classes.values():
+        for meth in ci.methods.values():
+            if meth.name == "__init__":
+                continue
+            for n in ast.walk(meth.node):
+                if not (isinstance(n, ast.Assign) and len(n.targets) == 1):
+                    continue
+                if _is_self_attr(n.targets[0]) is None:
+                    continue
+                if isinstance(n.value, ast.Call) and \
+                        project._lock_factory(mod, n.value) is not None:
+                    findings.append(Finding(
+                        mod.shown, n.lineno, n.col_offset, "T002",
+                        f"lock created in {ci.name}.{meth.name}(), not "
+                        f"__init__: lazy lock creation is itself a race "
+                        f"(two threads can each create 'the' lock)",
+                    ))
+    return findings
+
+
+# ------------------------------------------------------------ noqa layer --
+_NOQA_RE = re.compile(
+    r"#\s*noqa(?!\w)(?:\s*:\s*(?P<codes>[A-Z]\d{3}(?:\s*,\s*[A-Z]\d{3})*))?"
+)
+
+
+def _noqa_for(lines: list[str], lineno: int) -> set[str] | None:
+    """Codes suppressed on ``lineno`` (None = nothing, {"*"} = all)."""
+    if not 1 <= lineno <= len(lines):
+        return None
+    m = _NOQA_RE.search(lines[lineno - 1])
+    if not m:
+        return None
+    codes = m.group("codes")
+    if not codes:
+        return {"*"}
+    return {c.strip() for c in codes.split(",")}
+
+
+# -------------------------------------------------------------- pipeline --
+def _collect_files(paths: list[str]) -> list[Path]:
+    out: list[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(
+                f for f in path.rglob("*.py") if "__pycache__" not in f.parts
+            ))
+        elif path.suffix == ".py":
+            out.append(path)
+    return out
+
+
+def _shown_path(path: Path) -> str:
+    try:
+        return path.resolve().relative_to(Path.cwd()).as_posix()
+    except ValueError:
+        return str(path)
+
+
+def lint_paths(paths: list[str]) -> tuple[list[Finding], dict[str, list[str]]]:
+    """All findings (already noqa-filtered) plus {shown_path: source lines}."""
+    project = Project()
+    findings: list[Finding] = []
+    sources: dict[str, list[str]] = {}
+    mods: list[ModuleInfo] = []
+    for f in _collect_files(paths):
+        shown = _shown_path(f)
+        try:
+            src = f.read_text()
+            tree = ast.parse(src)
+        except SyntaxError as e:
+            findings.append(Finding(shown, e.lineno or 1, 0, "E999", str(e)))
+            continue
+        lines = src.splitlines()
+        sources[shown] = lines
+        mod = ModuleInfo(f, shown, f.stem, tree, lines)
+        project.add_module(mod)
+        mods.append(mod)
+    for mod in mods:
+        findings.extend(_file_findings(mod, project))
+    locks = LockAnalysis(project)
+    locks.walk_all()
+    findings.extend(locks.findings)
+    findings.extend(locks.cycle_findings())
+
+    kept = []
+    for fi in findings:
+        suppressed = _noqa_for(sources.get(fi.path, []), fi.line)
+        if suppressed and ("*" in suppressed or fi.code in suppressed):
+            continue
+        kept.append(fi)
+    kept.sort(key=lambda fi: (fi.path, fi.line, fi.code))
+    return kept, sources
+
+
+def _fingerprint(fi: Finding, sources: dict[str, list[str]]) -> str:
+    lines = sources.get(fi.path, [])
+    text = lines[fi.line - 1].strip() if 1 <= fi.line <= len(lines) else ""
+    return f"{fi.path}|{fi.code}|{text}"
+
+
+def _load_baseline(path: Path) -> dict[str, int]:
+    counts: dict[str, int] = {}
+    if not path.is_file():
+        return counts
+    for raw in path.read_text().splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        counts[line] = counts.get(line, 0) + 1
+    return counts
+
+
+_BASELINE_HEADER = """\
+# repro.analysis.lint baseline — allowlisted pre-existing findings.
+#
+# One fingerprint per line: <path>|<code>|<source line text>. Every entry
+# MUST carry a justification comment above it. Regenerate with
+#   python -m repro.analysis.lint src tests --write-baseline
+# New code must land clean: prefer fixing, then an inline
+# `# noqa: CODE — why` at the site, and only then a baseline entry.
+"""
+
+
+def main(argv=None) -> int:
+    repo_root = Path(__file__).resolve().parents[3]
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Repo-specific concurrency & JAX correctness lint.",
+    )
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument(
+        "--baseline", default=str(repo_root / "lint_baseline.txt"),
+        help="baseline file of allowlisted findings (default: repo root "
+        "lint_baseline.txt)",
+    )
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline with the current findings")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code, desc in RULES.items():
+            print(f"{code}  {desc}")
+        return 0
+
+    findings, sources = lint_paths(args.paths)
+
+    if args.write_baseline:
+        body = _BASELINE_HEADER + "".join(
+            _fingerprint(fi, sources) + "\n" for fi in findings
+        )
+        Path(args.baseline).write_text(body)
+        print(f"wrote {len(findings)} fingerprint(s) to {args.baseline}")
+        return 0
+
+    baseline = {} if args.no_baseline else _load_baseline(Path(args.baseline))
+    baselined = 0
+    fresh: list[Finding] = []
+    for fi in findings:
+        fp = _fingerprint(fi, sources)
+        if baseline.get(fp, 0) > 0:
+            baseline[fp] -= 1
+            baselined += 1
+        else:
+            fresh.append(fi)
+
+    for fi in fresh:
+        print(fi.render())
+    if fresh:
+        print(f"\n{len(fresh)} finding(s)"
+              + (f" ({baselined} baselined)" if baselined else "")
+              + " — fix, `# noqa: CODE — why`, or baseline with a "
+              "justification.")
+        return 1
+    note = f" ({baselined} baselined)" if baselined else ""
+    print(f"clean: 0 findings{note} over {len(sources)} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

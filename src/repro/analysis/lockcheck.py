@@ -1,0 +1,371 @@
+"""Runtime lock-order checker for the concurrent serving stack.
+
+The static pass (:mod:`repro.analysis.lint`) proves what it can see; this
+module checks what actually happens. :func:`install` replaces the
+``threading`` module *as seen by* the serving/ann modules with a proxy
+whose ``Lock``/``RLock``/``Condition`` are instrumented wrappers. Each
+wrapper:
+
+* records, per thread, the stack of locks currently held;
+* on every acquisition while other locks are held, records a directed
+  edge ``held-site -> acquired-site`` (a *site* is the ``file:line``
+  where the lock was constructed, so all engines' ``_lock`` instances
+  share one node) into a process-global order graph together with the
+  acquiring stack;
+* **before** blocking on the acquire, checks whether the new edge closes
+  a cycle in that graph — and raises :class:`LockOrderViolation`
+  carrying both the current stack and the stored stack of the
+  conflicting edge. Raising instead of acquiring turns a potential
+  deadlock (which would hang the suite) into a diagnosable failure;
+* counts JAX dispatch performed while holding any lock (via a
+  ``jax.block_until_ready`` shim), with cumulative seconds — the
+  runtime mirror of the static B001 rule.
+
+Activation: the suite-wide conftest fixture calls :func:`install` unless
+``REPRO_LOCKCHECK=0``. Tests that *deliberately* violate the order (the
+regression test for this checker) use :func:`scoped_registry` so their
+edges and violations never pollute the session-global graph.
+
+Import is dependency-free: ``jax`` is imported only inside
+:func:`install`, and only if available.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from contextlib import contextmanager
+
+_real_threading = threading
+
+
+class LockOrderViolation(RuntimeError):
+    """Two lock sites were acquired in conflicting orders."""
+
+    def __init__(self, message: str, *, current_stack: str, prior_stack: str):
+        super().__init__(
+            f"{message}\n\n--- current acquisition stack ---\n{current_stack}"
+            f"\n--- conflicting (recorded) acquisition stack ---\n{prior_stack}"
+        )
+        self.current_stack = current_stack
+        self.prior_stack = prior_stack
+
+
+class OrderRegistry:
+    """Process-global lock-order graph plus telemetry.
+
+    Uses *real* (uninstrumented) primitives internally; the registry lock
+    is a leaf — nothing is acquired while holding it.
+    """
+
+    def __init__(self):
+        self._mu = _real_threading.Lock()
+        # (site_a, site_b) -> stack text recorded when a->b was first seen
+        self.edges: dict[tuple[str, str], str] = {}
+        self.violations: list[LockOrderViolation] = []
+        self.acquisitions = 0
+        self.jax_dispatch_under_lock = 0
+        self.jax_seconds_under_lock = 0.0
+        self._tls = _real_threading.local()
+
+    # ---- per-thread held stack -------------------------------------------
+    def held(self) -> list:
+        stk = getattr(self._tls, "stack", None)
+        if stk is None:
+            stk = self._tls.stack = []
+        return stk
+
+    # ---- graph ------------------------------------------------------------
+    def _reaches(self, src: str, dst: str) -> bool:
+        seen, frontier = set(), [src]
+        while frontier:
+            node = frontier.pop()
+            if node == dst:
+                return True
+            if node in seen:
+                continue
+            seen.add(node)
+            frontier.extend(b for (a, b) in self.edges if a == node)
+        return False
+
+    def note_acquire(self, lock: "_InstrumentedLock") -> None:
+        """Record edges held->lock; raise on an order cycle. Called
+        *before* the real acquire so a true inversion raises instead of
+        deadlocking."""
+        held = self.held()
+        if not held:
+            return
+        stack = "".join(traceback.format_stack(limit=16)[:-2])
+        with self._mu:
+            for h in held:
+                a, b = h.site, lock.site
+                if a == b:
+                    continue  # same creation site (e.g. two futures)
+                if (a, b) in self.edges:
+                    continue
+                if (b, a) in self.edges or self._reaches(b, a):
+                    prior = self.edges.get(
+                        (b, a)
+                    ) or "(reached transitively through the order graph)"
+                    viol = LockOrderViolation(
+                        f"lock-order violation: acquiring {lock.site} "
+                        f"[{lock.label}] while holding {a} [{h.label}] — "
+                        f"the opposite order {b} -> {a} was already "
+                        f"recorded; these two paths can deadlock",
+                        current_stack=stack,
+                        prior_stack=prior,
+                    )
+                    self.violations.append(viol)
+                    raise viol
+                self.edges[(a, b)] = stack
+
+    def note_jax_dispatch(self, seconds: float) -> None:
+        with self._mu:
+            self.jax_dispatch_under_lock += 1
+            self.jax_seconds_under_lock += seconds
+
+    def report(self) -> dict:
+        with self._mu:
+            return {
+                "edges": len(self.edges),
+                "acquisitions": self.acquisitions,
+                "violations": len(self.violations),
+                "jax_dispatch_under_lock": self.jax_dispatch_under_lock,
+                "jax_seconds_under_lock": self.jax_seconds_under_lock,
+            }
+
+
+_registry = OrderRegistry()
+
+
+def registry() -> OrderRegistry:
+    return _registry
+
+
+@contextmanager
+def scoped_registry():
+    """Swap in a fresh registry (for tests that deliberately violate the
+    order), restoring the global one on exit."""
+    global _registry
+    prev, _registry = _registry, OrderRegistry()
+    try:
+        yield _registry
+    finally:
+        _registry = prev
+
+
+# ---------------------------------------------------------------- wrappers --
+_THIS_FILE = __file__
+
+
+def _creation_site() -> str:
+    # walk out of this module to the caller that constructed the lock
+    for frame in reversed(traceback.extract_stack(limit=12)[:-2]):
+        if frame.filename != _THIS_FILE:
+            return f"{frame.filename.rsplit('/', 1)[-1]}:{frame.lineno}"
+    return "<unknown>"
+
+
+class _InstrumentedLock:
+    """Wraps a real Lock/RLock; tracks ownership and the per-thread held
+    stack, and consults the order registry before every blocking acquire."""
+
+    _reentrant = False
+
+    def __init__(self, label: str = ""):
+        self._lk = self._make()
+        self.site = _creation_site()
+        self.label = label or type(self).__name__
+        self._owner: int | None = None
+        self._count = 0
+
+    @staticmethod
+    def _make():
+        return _real_threading.Lock()
+
+    # -- core protocol ------------------------------------------------------
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        me = _real_threading.get_ident()
+        reenter = self._reentrant and self._owner == me
+        if not reenter and blocking:
+            _registry.note_acquire(self)
+        got = self._lk.acquire(blocking, timeout) if timeout != -1 else \
+            self._lk.acquire(blocking)
+        if not got:
+            return False
+        self._owner = me
+        self._count += 1
+        if not reenter:
+            reg = _registry
+            reg.held().append(self)
+            with reg._mu:
+                reg.acquisitions += 1
+        return True
+
+    def release(self) -> None:
+        me = _real_threading.get_ident()
+        if self._owner == me:
+            self._count -= 1
+            if self._count == 0:
+                self._owner = None
+                held = _registry.held()
+                if self in held:
+                    held.remove(self)
+        else:
+            # plain Lock permits cross-thread release (signal idiom);
+            # the real primitive raises for an RLock
+            self._owner = None
+            self._count = 0
+        self._lk.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def locked(self) -> bool:
+        return self._lk.locked() if hasattr(self._lk, "locked") else \
+            self._owner is not None
+
+    # -- Condition compatibility -------------------------------------------
+    # threading.Condition duck-types its lock through these three hooks;
+    # providing them keeps wait() from doing probe acquires that would
+    # show up as spurious graph edges.
+    def _is_owned(self) -> bool:
+        return self._owner == _real_threading.get_ident()
+
+    def _release_save(self):
+        # fully release (wait() drops the lock even under reentrancy)
+        count, self._count, self._owner = self._count, 0, None
+        held = _registry.held()
+        if self in held:
+            held.remove(self)
+        if self._reentrant:
+            state = self._lk._release_save()
+            return (count, state)
+        self._lk.release()
+        return (count, None)
+
+    def _acquire_restore(self, saved) -> None:
+        count, state = saved
+        # re-acquiring after wait() re-enters the order graph
+        _registry.note_acquire(self)
+        if self._reentrant and state is not None:
+            self._lk._acquire_restore(state)
+        else:
+            self._lk.acquire()
+        self._owner = _real_threading.get_ident()
+        self._count = count
+        _registry.held().append(self)
+
+
+class _InstrumentedRLock(_InstrumentedLock):
+    _reentrant = True
+
+    @staticmethod
+    def _make():
+        return _real_threading.RLock()
+
+
+def Lock():
+    return _InstrumentedLock("Lock")
+
+
+def RLock():
+    return _InstrumentedRLock("RLock")
+
+
+def Condition(lock=None):
+    if lock is None:
+        lock = _InstrumentedRLock("Condition")
+    return _real_threading.Condition(lock)
+
+
+class _ThreadingProxy:
+    """Drop-in for the ``threading`` module: instrumented primitives,
+    everything else (Thread, Event, local, current_thread, ...) forwarded
+    to the real module."""
+
+    Lock = staticmethod(Lock)
+    RLock = staticmethod(RLock)
+    Condition = staticmethod(Condition)
+
+    def __getattr__(self, name):
+        return getattr(_real_threading, name)
+
+
+# ---------------------------------------------------------------- install --
+_TARGET_MODULES = (
+    "repro.serving.ann_engine",
+    "repro.serving.scheduler",
+    "repro.ann.mutable",
+    "repro.checkpoint.checkpoint",
+)
+
+_installed = False
+_real_block_until_ready = None
+
+
+def install(extra_modules: tuple[str, ...] = ()) -> OrderRegistry:
+    """Point the serving stack's ``threading`` at the instrumented proxy
+    and shim ``jax.block_until_ready`` to count dispatch-under-lock.
+
+    Idempotent; affects only locks created *after* the call, so it must
+    run before engines/pools are constructed (the conftest fixture runs
+    it at session start). Returns the global registry.
+    """
+    global _installed, _real_block_until_ready
+    if _installed:
+        return _registry
+    import importlib
+
+    proxy = _ThreadingProxy()
+    for name in _TARGET_MODULES + tuple(extra_modules):
+        try:
+            mod = importlib.import_module(name)
+        except Exception:
+            continue  # optional target (e.g. jax missing): skip
+        if getattr(mod, "threading", None) is _real_threading:
+            mod.threading = proxy
+    try:
+        import jax
+    except Exception:
+        jax = None
+    if jax is not None and _real_block_until_ready is None:
+        _real_block_until_ready = jax.block_until_ready
+
+        def _counting_block_until_ready(x):
+            if _registry.held():
+                t0 = time.perf_counter()
+                try:
+                    return _real_block_until_ready(x)
+                finally:
+                    _registry.note_jax_dispatch(time.perf_counter() - t0)
+            return _real_block_until_ready(x)
+
+        jax.block_until_ready = _counting_block_until_ready
+    _installed = True
+    return _registry
+
+
+def uninstall() -> None:
+    """Best-effort restore (used by unit tests of the checker itself)."""
+    global _installed, _real_block_until_ready
+    import importlib
+
+    for name in _TARGET_MODULES:
+        try:
+            mod = importlib.import_module(name)
+        except Exception:
+            continue
+        if isinstance(getattr(mod, "threading", None), _ThreadingProxy):
+            mod.threading = _real_threading
+    if _real_block_until_ready is not None:
+        import jax
+
+        jax.block_until_ready = _real_block_until_ready
+        _real_block_until_ready = None
+    _installed = False

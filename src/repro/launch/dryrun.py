@@ -184,7 +184,7 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool):
 
 
 def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir: str) -> dict:
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         lowered, mesh, meta = lower_cell(arch_name, shape_name, multi_pod)
     except Exception as e:
@@ -194,14 +194,14 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir: str) -> 
                 "traceback": traceback.format_exc()[-2000:]}
     if lowered is None:
         return meta | {"arch": arch_name, "shape": shape_name}
-    meta["lower_s"] = round(time.time() - t0, 2)
-    t1 = time.time()
+    meta["lower_s"] = round(time.perf_counter() - t0, 2)
+    t1 = time.perf_counter()
     try:
         compiled = lowered.compile()
     except Exception as e:
         return meta | {"error": f"compile: {type(e).__name__}: {e}",
                        "traceback": traceback.format_exc()[-2000:]}
-    meta["compile_s"] = round(time.time() - t1, 2)
+    meta["compile_s"] = round(time.perf_counter() - t1, 2)
     mem = _mem_analysis(compiled)
     cost = _cost_analysis(compiled)
     print(f"[{meta['arch']} x {meta['shape']} x {meta['mesh']}] memory_analysis:", mem)

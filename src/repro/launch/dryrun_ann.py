@@ -124,7 +124,7 @@ def main():
             ),
         }
         for name, lower in jobs.items():
-            t0 = time.time()
+            t0 = time.perf_counter()
             lowered = lower()
             compiled = lowered.compile()
             h = analyze(compiled.as_text())
@@ -137,7 +137,7 @@ def main():
             except Exception:
                 pass
             results[name] = {
-                "compile_s": round(time.time() - t0, 2),
+                "compile_s": round(time.perf_counter() - t0, 2),
                 "flops": h["flops"], "bytes": h["bytes"],
                 "collective_total": h["collective_total"],
                 "memory_analysis": mem,

@@ -41,9 +41,9 @@ def main(argv=None):
         )
         for _ in range(args.requests)
     ]
-    t0 = time.time()
+    t0 = time.perf_counter()
     outs = engine.generate(reqs)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     total_new = sum(len(o) for o in outs)
     print(f"served {len(reqs)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s)")

@@ -69,7 +69,7 @@ def main(argv=None):
     stream = SyntheticTokenStream(cfg.vocab_size, args.seq_len, args.batch_size,
                                   seed=args.seed)
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(start_step, args.steps):
         batch = jax.tree.map(jnp.asarray, stream.batch(step))
         state, metrics = step_fn(state, batch)
@@ -78,7 +78,7 @@ def main(argv=None):
         if step % args.log_every == 0 or step == args.steps - 1:
             loss = float(metrics["loss"])
             losses.append(loss)
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             tput = args.batch_size * args.seq_len * (step - start_step + 1) / max(dt, 1e-9)
             print(f"step {step:5d}  loss {loss:8.4f}  gnorm {float(metrics['grad_norm']):7.3f}  "
                   f"lr {float(metrics['lr']):.2e}  tok/s {tput:9.0f}", flush=True)

@@ -995,7 +995,10 @@ class AnnServingEngine:
         with self._exec_lock:
             generation = self.index_generation
             t0 = time.perf_counter()
-            res = self.backend.run(bucket, k, cfg, pad_rows(queries, bucket))
+            # noqa: B001 — deliberate: _exec_lock IS the batch-vs-swap
+            # serialization point; dispatch must happen under it so a
+            # swap_index() can never interleave with an in-flight batch.
+            res = self.backend.run(bucket, k, cfg, pad_rows(queries, bucket))  # noqa: B001
             dt = time.perf_counter() - t0
         now = time.monotonic()
         served: list = []

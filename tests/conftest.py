@@ -19,6 +19,30 @@ except ImportError:
 from repro.data import gmm_dataset, make_queries
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _lockcheck():
+    """Run the whole suite with the runtime lock-order checker installed
+    (see :mod:`repro.analysis.lockcheck`): every lock the serving stack
+    creates is instrumented, conflicting acquisition orders raise
+    immediately instead of deadlocking, and the session fails if any
+    violation was recorded. Opt out with ``REPRO_LOCKCHECK=0``.
+
+    Installed before any engine/pool exists (session start) because only
+    locks created after install() are instrumented.
+    """
+    if os.environ.get("REPRO_LOCKCHECK", "1") == "0":
+        yield None
+        return
+    from repro.analysis import lockcheck
+
+    reg = lockcheck.install()
+    yield reg
+    assert not reg.violations, (
+        "lock-order violations recorded during the session:\n"
+        + "\n".join(str(v) for v in reg.violations)
+    )
+
+
 @pytest.fixture(scope="session")
 def small_dataset():
     """Shared small ANN dataset: (data (~8k, 64), queries (16, 64), gt ids)."""

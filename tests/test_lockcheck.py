@@ -1,0 +1,192 @@
+"""Runtime lock-order checker: wrapper semantics, violation detection,
+JAX-dispatch accounting, and the PR-6 one-way mutable->engine lock-order
+invariant as a deliberate-inversion regression test.
+
+All deliberate violations run inside ``lockcheck.scoped_registry()`` so
+they never pollute the session-global order graph that the conftest
+fixture asserts clean at session end.
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis import lockcheck
+
+lockcheck_on = pytest.mark.skipif(
+    os.environ.get("REPRO_LOCKCHECK", "1") == "0",
+    reason="needs the instrumented stack (REPRO_LOCKCHECK=0 set)",
+)
+
+
+# ------------------------------------------------------- wrapper basics --
+def test_order_violation_raises_with_both_stacks():
+    with lockcheck.scoped_registry() as reg:
+        a = lockcheck.Lock()
+        b = lockcheck.Lock()
+        with a:
+            with b:
+                pass
+        with pytest.raises(lockcheck.LockOrderViolation) as exc:
+            with b:
+                with a:
+                    pass
+        msg = str(exc.value)
+        assert "current acquisition stack" in msg
+        assert "conflicting (recorded) acquisition stack" in msg
+        assert len(reg.violations) == 1
+    # the deliberate violation stayed scoped
+    assert lockcheck.registry().violations == []
+
+
+def test_consistent_order_records_edges_without_raising():
+    with lockcheck.scoped_registry() as reg:
+        a = lockcheck.Lock()
+        b = lockcheck.Lock()
+        for _ in range(3):
+            with a:
+                with b:
+                    pass
+        assert reg.report()["violations"] == 0
+        assert reg.report()["edges"] == 1  # deduped by site pair
+
+
+def test_transitive_cycle_is_detected():
+    with lockcheck.scoped_registry():
+        a = lockcheck.Lock()
+        b = lockcheck.Lock()
+        c = lockcheck.Lock()
+        with a:
+            with b:
+                pass
+        with b:
+            with c:
+                pass
+        with pytest.raises(lockcheck.LockOrderViolation):
+            with c:
+                with a:  # closes a -> b -> c -> a
+                    pass
+
+
+def test_rlock_reentrancy_is_not_a_violation():
+    with lockcheck.scoped_registry() as reg:
+        r = lockcheck.RLock()
+        with r:
+            with r:
+                with r:
+                    pass
+        assert reg.report()["violations"] == 0
+
+
+def test_same_creation_site_instances_share_a_node():
+    # two futures' condition locks come from one source line; holding one
+    # while touching another (drain scans futures) must not self-edge
+    with lockcheck.scoped_registry() as reg:
+        def make():
+            return lockcheck.Lock()
+
+        x, y = make(), make()
+        assert x.site == y.site
+        with x:
+            with y:
+                pass
+        assert reg.report()["edges"] == 0
+
+
+def test_condition_wait_releases_and_reacquires():
+    with lockcheck.scoped_registry() as reg:
+        cond = lockcheck.Condition()
+        state = {"go": False}
+
+        def waiter():
+            with cond:
+                cond.wait_for(lambda: state["go"])
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        # if wait() failed to release, this acquire would deadlock
+        with cond:
+            state["go"] = True
+            cond.notify_all()
+        t.join(timeout=10.0)
+        assert not t.is_alive()
+        assert reg.report()["violations"] == 0
+
+
+def test_condition_over_plain_lock():
+    with lockcheck.scoped_registry():
+        cond = lockcheck.Condition(lockcheck.Lock())
+        with cond:
+            cond.notify_all()
+
+
+# --------------------------------------------------- instrumented stack --
+@lockcheck_on
+def test_install_instruments_the_serving_stack():
+    from repro.serving.scheduler import WorkerPool
+
+    pool = WorkerPool(name="lockcheck-probe")
+    try:
+        assert isinstance(
+            pool._cond._lock, lockcheck._InstrumentedLock
+        ), "WorkerPool built after install() must get instrumented locks"
+        assert pool.submit(lambda: 7).result(timeout=10.0) == 7
+    finally:
+        pool.shutdown(wait=True, timeout=10.0)
+
+
+@lockcheck_on
+def test_jax_dispatch_under_lock_is_counted():
+    import jax.numpy as jnp
+    import jax
+
+    with lockcheck.scoped_registry() as reg:
+        lk = lockcheck.Lock()
+        with lk:
+            jax.block_until_ready(jnp.zeros(8) + 1.0)
+        rep = reg.report()
+        assert rep["jax_dispatch_under_lock"] == 1
+        assert rep["jax_seconds_under_lock"] >= 0.0
+        # dispatch with no lock held is not charged
+        jax.block_until_ready(jnp.zeros(8) + 1.0)
+        assert reg.report()["jax_dispatch_under_lock"] == 1
+
+
+# ------------------------------------- the PR-6 invariant, machine-held --
+@lockcheck_on
+def test_mutable_engine_lock_inversion_is_caught():
+    """Regression for the hand-enforced one-way lock order: engine-side
+    locks may wrap mutable-side ones (notify/swap paths), never the
+    reverse. Deliberately invert it and assert the checker raises instead
+    of deadlocking."""
+    from repro.ann import MutableAnnIndex
+    from repro.core import taco_config
+
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 30, (128, 16)).astype(np.float32)
+    cfg = taco_config(n_subspaces=2, subspace_dim=8, n_clusters=16,
+                      kmeans_iters=2, alpha=0.1, beta=1.0,
+                      selection="fixed", k=4)
+
+    with lockcheck.scoped_registry() as reg:
+        m = MutableAnnIndex.build(data, cfg)
+        engine = m.engine(max_batch=4)
+        assert isinstance(m._lock, lockcheck._InstrumentedLock)
+        assert isinstance(engine._lock, lockcheck._InstrumentedLock)
+        # the sanctioned direction (engine wraps mutable), as on the
+        # notify_index_mutated / swap paths
+        with engine._lock:
+            with m._lock:
+                pass
+        # the forbidden direction — what PR-6 moved _notify_engines out of
+        # mutable._lock to prevent — must raise, with both stacks attached
+        with pytest.raises(lockcheck.LockOrderViolation) as exc:
+            with m._lock:
+                with engine._lock:
+                    pass
+        assert "mutable.py" in str(exc.value)
+        assert "ann_engine.py" in str(exc.value)
+        assert len(reg.violations) == 1
+        engine.close()
+    assert lockcheck.registry().violations == []
