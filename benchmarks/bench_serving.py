@@ -81,6 +81,16 @@ def stage_timings(index, cfg, queries):
     # --- masked-full pipeline stages --------------------------------------
     ci_fn = jax.jit(lambda q: _collision_inputs(index, q, cfg)[:5])
     d1s, d2s, a1s, a2s, taus = jax.block_until_ready(ci_fn(queries))
+    # legacy before-row (ISSUE 8): the pre-optimization collision-input
+    # stage — lax.sort-based activation, assignment stacks rebuilt inline —
+    # timed alongside so the artifact carries the before/after delta
+    import dataclasses as _dc
+
+    legacy_cfg = _dc.replace(cfg, activation="sort_lax")
+    ci_legacy_fn = jax.jit(
+        lambda q: _collision_inputs(index, q, legacy_cfg, hoist=False)[:5]
+    )
+    jax.block_until_ready(ci_legacy_fn(queries))
     hist_fn = jax.jit(lambda *a: ops.schist(*a, impl="jnp"))
     hist = jax.block_until_ready(hist_fn(d1s, d2s, a1s, a2s, taus))
     th_fn = jax.jit(
@@ -99,6 +109,7 @@ def stage_timings(index, cfg, queries):
         },
         "masked_full": {
             "collision_inputs_us": time_call(ci_fn, queries),
+            "collision_inputs_legacy_us": time_call(ci_legacy_fn, queries),
             "schist_us": time_call(hist_fn, d1s, d2s, a1s, a2s, taus),
             "threshold_us": time_call(th_fn, hist),
             "masked_rerank_us": time_call(

@@ -49,6 +49,51 @@ def run():
                      lambda *a: ops.masked_rerank(*a, impl="jnp"),
                      d1, d2, a1, a2, taus, th, dat, nrm, qs, 10), 1),
                  "jnp_stream"))
+    # bf16 data tiles, f32 accumulation (ISSUE 8): same workload, rounded
+    # matmul operands — the HBM-traffic half of the rerank contraction
+    rows.append(("kernels/masked_rerank_6x100x100k_d64_k10_bf16",
+                 round(time_call(
+                     lambda *a: ops.masked_rerank(*a, impl="jnp",
+                                                  precision="bf16"),
+                     d1, d2, a1, a2, taus, th, dat, nrm, qs, 10), 1),
+                 "jnp_stream_bf16"))
+
+    # activation before/after (ISSUE 8 tentpole): bit-lattice bisection vs
+    # the lax.sort formulation it replaced, one (16, sqrt_k=32) batch x the
+    # N_s=6 per-subspace loop the query path actually pays
+    from repro.core.activation import activation_taus
+
+    ad1 = jnp.asarray(rng.uniform(0, 4, (16, 32)), jnp.float32)
+    ad2 = jnp.asarray(rng.uniform(0, 4, (16, 32)), jnp.float32)
+    sizes = jnp.asarray(rng.integers(0, 200, (32, 32)), jnp.int32)
+
+    def act_x6(method):
+        def run6(a, b, s):
+            outs = [activation_taus(a, b, s, 500.0, method=method)
+                    for _ in range(6)]
+            return outs[-1]
+        return run6
+
+    rows.append(("kernels/activation_sort_bisect_6x16x32",
+                 round(time_call(act_x6("sort"), ad1, ad2, sizes), 1),
+                 "bisect"))
+    rows.append(("kernels/activation_sort_lax_6x16x32",
+                 round(time_call(act_x6("sort_lax"), ad1, ad2, sizes), 1),
+                 "lax_sort_baseline"))
+
+    # autotuned (bq, bn) blocks: default vs winner on a small Pallas
+    # problem (interpret mode off-TPU — relative block effects, not
+    # absolute kernel perf) + the trial table for BENCH_query.json
+    from repro.kernels import autotune
+
+    impl_label = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+    res = autotune.autotune("masked_rerank", q=16, n=2048, d=64, k=10,
+                            budget_s=20.0, impl="pallas")
+    rows.append(("kernels/masked_rerank_blocks_default_16x2048",
+                 round(res["default_us"], 1), impl_label))
+    rows.append(("kernels/masked_rerank_blocks_tuned_16x2048",
+                 round(res["winner_us"], 1),
+                 f"{impl_label} bq,bn={tuple(res['winner'])}"))
     return emit(rows)
 
 

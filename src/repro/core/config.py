@@ -47,6 +47,23 @@ class SCConfig:
     #:                   corpus-sharded local queries (billion-scale shards
     #:                   keep the gather path, see ROADMAP).
     rerank: str = "gather"
+    #: numeric precision of the streamed data/centroid tiles on the query
+    #: path (kernels + jnp-stream twins accumulate in f32 either way):
+    #:   'f32'  — default; every bitwise-determinism gate holds.
+    #:   'bf16' — round centroid-distance inputs and the re-rank matmul
+    #:            operands through bfloat16, halving HBM traffic for the
+    #:            dominant contractions. Candidate *selection* may differ
+    #:            from f32 (gated by a recall-parity sweep,
+    #:            tests/test_precision.py); returned distances stay exact
+    #:            f32 because finalize_topk recomputes them from the
+    #:            original vectors.
+    precision: str = "f32"
+
+    def __post_init__(self):
+        if self.precision not in ("f32", "bf16"):
+            raise ValueError(
+                f"precision must be 'f32' or 'bf16', got {self.precision!r}"
+            )
 
     @property
     def sqrt_k(self) -> int:

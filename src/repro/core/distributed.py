@@ -51,7 +51,13 @@ from repro.core.selection import (
     sc_histogram,
     select_candidates,
 )
-from repro.core.taco import SCIndex, _sub_slices, data_norms_of, rerank
+from repro.core.taco import (
+    SCIndex,
+    _sub_slices,
+    collision_constants,
+    data_norms_of,
+    rerank,
+)
 from repro.utils import pairwise_sq_dists, topk_smallest
 
 
@@ -174,8 +180,10 @@ def make_distributed_query_with_stats(
             d2s.append(d2)
             taus.append(tau)
         d1s, d2s, taus = jnp.stack(d1s), jnp.stack(d2s), jnp.stack(taus)
-        a1s = jnp.stack([s.assign1 for s in idx.subspaces])
-        a2s = jnp.stack([s.assign2 for s in idx.subspaces])
+        # collision_constants bypasses its cache for tracers (shard_map'd
+        # assignment arrays), so this stays an inline stack under the mesh
+        # while sharing the hoisted-constant code path with core/taco.py.
+        a1s, a2s = collision_constants(idx)
 
         if rerank_mode == "masked_full":
             # Streaming masked-full per shard: local SC histograms are

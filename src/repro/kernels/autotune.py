@@ -1,0 +1,228 @@
+"""Autotuned (bq, bn) block sizes for the streaming query kernels.
+
+The ``schist`` / ``masked_rerank`` wrappers in :mod:`repro.kernels.ops`
+historically hardcoded ``bq=8, bn=512``. This module replaces the constant
+with a two-level cache:
+
+  * **in-process** — ``get_blocks(op, ...)`` is a dict lookup keyed by
+    (op, backend, precision, pow2 bucket of Q, pow2 bucket of n). It NEVER
+    searches: an unknown key returns :data:`DEFAULT_BLOCKS`, so the serving
+    path stays allocation- and surprise-free.
+  * **JSON artifact** — ``save_cache``/``load_cache`` persist the winners so
+    a tuned deployment can ship its table (the benchmark suite records the
+    search results into BENCH_query.json via benchmarks/kernels_micro.py).
+
+``autotune()`` is the explicit search harness: it times the candidate grid
+on synthetic inputs shaped like the caller's workload, under a wall-clock
+budget (``time.monotonic()`` deadline — candidates that don't fit the budget
+are skipped, the default blocks are always measured first so a winner always
+exists), installs the winner in-process, and returns the trial table.
+
+CLI (exercised by the CI bench-smoke step with a tiny budget)::
+
+    PYTHONPATH=src python -m repro.kernels.autotune \
+        --budget 2 --n 2048 --json /tmp/autotune.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+#: Fallback block sizes — the pre-autotune hardcoded values.
+DEFAULT_BLOCKS: tuple[int, int] = (8, 512)
+
+#: Candidate (bq, bn) grid. bq is the query-block (sublane) size, bn the
+#: streamed point-block (lane) size; both stay within one VMEM-friendly
+#: tile budget at d <= 128.
+CANDIDATES: tuple[tuple[int, int], ...] = (
+    (8, 256),
+    (8, 512),
+    (8, 1024),
+    (16, 256),
+    (16, 512),
+    (16, 1024),
+    (32, 512),
+)
+
+_CACHE: dict[tuple, tuple[int, int]] = {}
+
+
+def _bucket(x: int) -> int:
+    """Next power-of-two shape bucket (so nearby workloads share winners)."""
+    x = max(int(x), 1)
+    b = 1
+    while b < x:
+        b *= 2
+    return b
+
+
+def cache_key(op: str, precision: str = "f32", q: int = 8, n: int = 512,
+              backend: str | None = None) -> tuple:
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    return (op, backend, precision, _bucket(q), _bucket(n))
+
+
+def get_blocks(op: str, precision: str = "f32", q: int = 8,
+               n: int = 512) -> tuple[int, int]:
+    """Tuned (bq, bn) for this op/shape, or :data:`DEFAULT_BLOCKS` if the
+    key was never tuned. Pure lookup — never triggers a search."""
+    return _CACHE.get(cache_key(op, precision, q, n), DEFAULT_BLOCKS)
+
+
+def set_blocks(op: str, blocks: tuple[int, int], precision: str = "f32",
+               q: int = 8, n: int = 512, backend: str | None = None) -> None:
+    _CACHE[cache_key(op, precision, q, n, backend)] = (
+        int(blocks[0]), int(blocks[1]),
+    )
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+# ------------------------------------------------------------- persistence --
+def save_cache(path: str) -> None:
+    """Persist the in-process winners as JSON ('op|backend|prec|qb|nb')."""
+    payload = {
+        "|".join(str(p) for p in key): list(blocks)
+        for key, blocks in _CACHE.items()
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+
+
+def load_cache(path: str) -> int:
+    """Load winners saved by :func:`save_cache`; returns the entry count."""
+    with open(path) as f:
+        payload = json.load(f)
+    for key_str, blocks in payload.items():
+        op, backend, precision, qb, nb = key_str.split("|")
+        _CACHE[(op, backend, precision, int(qb), int(nb))] = (
+            int(blocks[0]), int(blocks[1]),
+        )
+    return len(payload)
+
+
+# ------------------------------------------------------------------ search --
+def _synthetic_problem(op: str, q: int, n: int, d: int, n_sub: int,
+                       sqrt_k: int, k: int, seed: int):
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    d1s = jnp.asarray(rng.uniform(0, 4, (n_sub, q, sqrt_k)), jnp.float32)
+    d2s = jnp.asarray(rng.uniform(0, 4, (n_sub, q, sqrt_k)), jnp.float32)
+    a1s = jnp.asarray(rng.integers(0, sqrt_k, (n_sub, n)), jnp.int32)
+    a2s = jnp.asarray(rng.integers(0, sqrt_k, (n_sub, n)), jnp.int32)
+    taus = jnp.asarray(rng.uniform(2, 5, (n_sub, q)), jnp.float32)
+    if op == "schist":
+        return (d1s, d2s, a1s, a2s, taus), {}
+    data = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    queries = jnp.asarray(rng.standard_normal((q, d)), jnp.float32)
+    norms = jnp.sum(data * data, axis=1)
+    thresh = jnp.full((q,), n_sub // 2, jnp.int32)
+    return (d1s, d2s, a1s, a2s, taus, thresh, data, norms, queries), {"k": k}
+
+
+def _time_candidate(fn, args, kwargs, deadline: float, iters: int = 3):
+    """Median elapsed us (perf_counter) over up to ``iters`` timed calls
+    after one warmup, stopping early at the monotonic deadline. Returns
+    None if even the warmup does not fit the budget."""
+    import jax
+    import numpy as np
+
+    jax.block_until_ready(fn(*args, **kwargs))  # warmup compiles
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        ts.append(time.perf_counter() - t0)
+        if time.monotonic() >= deadline:
+            break
+    return float(np.median(ts) * 1e6)
+
+
+def autotune(op: str = "masked_rerank", *, q: int = 16, n: int = 2048,
+             d: int = 64, n_sub: int = 6, sqrt_k: int = 32, k: int = 10,
+             budget_s: float = 10.0, impl: str = "pallas",
+             precision: str = "f32", seed: int = 0) -> dict:
+    """Search the candidate grid for ``op`` on a synthetic workload of this
+    shape; install and return the winner.
+
+    The default blocks are always timed first (a winner exists even on a
+    tiny budget); each further candidate is attempted only while the
+    monotonic deadline has not passed. Returns ``{"op", "key", "winner",
+    "default_us", "winner_us", "trials": [{"blocks", "us"} ...]}``.
+    """
+    from repro.kernels import ops
+
+    if op not in ("schist", "masked_rerank"):
+        raise ValueError(f"unknown autotune op {op!r}")
+    args, kwargs = _synthetic_problem(op, q, n, d, n_sub, sqrt_k, k, seed)
+    op_fn = getattr(ops, op)
+    deadline = time.monotonic() + float(budget_s)
+
+    trials = []
+    grid = [DEFAULT_BLOCKS] + [c for c in CANDIDATES if c != DEFAULT_BLOCKS]
+    for i, blocks in enumerate(grid):
+        if i > 0 and time.monotonic() >= deadline:
+            break
+        us = _time_candidate(
+            lambda *a, **kw: op_fn(*a, impl=impl, blocks=blocks, **kw),
+            args, kwargs, deadline,
+        )
+        trials.append({"blocks": list(blocks), "us": round(us, 1)})
+    best = min(trials, key=lambda t: t["us"])
+    winner = (best["blocks"][0], best["blocks"][1])
+    set_blocks(op, winner, precision=precision, q=q, n=n)
+    return {
+        "op": op,
+        "key": list(cache_key(op, precision, q, n)),
+        "winner": list(winner),
+        "default_us": trials[0]["us"],
+        "winner_us": best["us"],
+        "trials": trials,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--ops", nargs="+", default=["schist", "masked_rerank"])
+    ap.add_argument("--budget", type=float, default=10.0,
+                    help="wall-clock budget (s) PER op")
+    ap.add_argument("--q", type=int, default=16)
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--impl", default="pallas", choices=["pallas", "jnp", "auto"])
+    ap.add_argument("--precision", default="f32", choices=["f32", "bf16"])
+    ap.add_argument("--json", default=None, help="write trial table + cache")
+    args = ap.parse_args(argv)
+
+    results = []
+    for op in args.ops:
+        res = autotune(op, q=args.q, n=args.n, d=args.d, k=args.k,
+                       budget_s=args.budget, impl=args.impl,
+                       precision=args.precision)
+        results.append(res)
+        print(f"{op}: winner bq,bn={tuple(res['winner'])} "
+              f"({res['winner_us']:.1f} us vs default {res['default_us']:.1f} us, "
+              f"{len(res['trials'])}/{len(CANDIDATES)} candidates tried)")
+    if args.json:
+        payload = {
+            "results": results,
+            "cache": {"|".join(str(p) for p in k): list(v)
+                      for k, v in _CACHE.items()},
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

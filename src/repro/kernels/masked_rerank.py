@@ -13,7 +13,10 @@ Per (query block, point block) grid step the kernel
      padding) to +inf, and
   4. merges the block into a running per-query top-k state carried in VMEM
      scratch across the point-block grid axis (flash-attention-style
-     streaming merge: k rounds of extract-min vs replace-worst).
+     streaming accumulator: bitonic partial sort of the block, then one
+     sorted-run merge against the state — O(log^2 bn + log kp) vectorized
+     compare-exchange passes instead of the old k rounds of extract-min,
+     which scaled linearly with k).
 
 No candidate set is ever materialized and there is no static candidate
 cap, so truncation is structurally impossible: every point at or above
@@ -33,11 +36,18 @@ Streaming-accumulator design notes
   < sqrt_k); the feature dim is zero-padded (exact for dot products).
   Scratch slots >= k hold +inf and are excluded from the worst-slot
   search, so the state can never grow beyond k real entries.
-* Tie handling: the merge keeps the incumbent on distance ties, and
-  extract-min takes the lowest lane first, so ties resolve to the lowest
-  point id — the same rule as the gather path's stable top_k over
+* Tie handling: every compare-exchange uses the compound (distance, id)
+  key, so distance ties resolve to the lowest point id. Because point
+  blocks stream in ascending-id order, this is exactly the old
+  keep-the-incumbent extract-min rule (the incumbent always has the lower
+  id), and the same rule as the gather path's stable top_k over
   index-ordered candidates. The wrapper canonicalizes the final slot
   order (distance-major, id-minor) for bitwise-stable results.
+* State layout: the (bq, kp) scratch is kept fully sorted ascending by
+  (distance, id). Unfilled slots hold (+inf, -1); masked/padded points
+  carry (+inf, real id), which the compound order places AFTER every
+  (+inf, -1), so they can never displace an empty slot — the first k
+  lanes are always the k best (or (+inf, -1) when fewer points pass).
 """
 from __future__ import annotations
 
@@ -50,6 +60,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.schist import (
     _block_sc,
+    _shrink_to_divisor,
     block_sc_scores,
     cell_ids,
     collision_table,
@@ -59,33 +70,98 @@ INF = float("inf")  # plain Python float: jnp scalars would be captured
                     # as pallas_call constants
 
 
-def _merge_topk(bd, bi, dist, ids_base, k: int):
+def _next_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def _partner(x, lane, stride: int):
+    """Value at ``lane XOR stride`` — the bitonic exchange partner — via two
+    lane rotations + select (``pltpu.roll`` lowers on Mosaic; reshapes that
+    split the lane axis may not). No wraparound leaks: a lane with bit
+    ``stride`` clear reads lane+stride (< L), one with it set reads
+    lane-stride (>= 0)."""
+    L = x.shape[1]
+    up = pltpu.roll(x, L - stride, 1)  # y[lane] = x[lane + stride]
+    dn = pltpu.roll(x, stride, 1)      # y[lane] = x[lane - stride]
+    return jnp.where((lane & stride) == 0, up, dn)
+
+
+def _compare_exchange(d, i, lane, stride: int, asc):
+    """One bitonic compare-exchange pass on the compound (distance, id)
+    key. ``asc`` is a per-lane bool: True where the enclosing subsequence
+    sorts ascending (partners always agree — they differ only in bit
+    ``stride``, below any direction bit)."""
+    dp = _partner(d, lane, stride)
+    ip = _partner(i, lane, stride)
+    is_lo = (lane & stride) == 0
+    partner_less = (dp < d) | ((dp == d) & (ip < i))
+    take = jnp.where(asc == is_lo, partner_less, ~partner_less)
+    return jnp.where(take, dp, d), jnp.where(take, ip, i)
+
+
+def _bitonic_sort(d, i, lane, *, descending: bool = False):
+    """Full bitonic sort of each row by the compound (distance, id) key.
+    Lane count must be a power of two."""
+    L = d.shape[1]
+    size = 2
+    while size <= L:
+        asc = (lane & size) == 0
+        if descending:
+            asc = ~asc
+        stride = size // 2
+        while stride:
+            d, i = _compare_exchange(d, i, lane, stride, asc)
+            stride //= 2
+        size *= 2
+    return d, i
+
+
+def _merge_topk(bd, bi, dist, ids_base):
     """Merge (bq, bn) block distances into the (bq, kp) running state.
 
-    k rounds: extract the block min; if it beats the current worst of the
-    k filled slots, replace that slot. Once the block min fails to beat
-    the worst slot, later rounds are no-ops (the min is non-decreasing).
+    The state is kept fully sorted ascending by (distance, id). The block
+    is bitonic-sorted DESCENDING; its kp smallest entries (the last kp
+    lanes, a descending run) then concatenate with the ascending state
+    into a bitonic sequence, so one elementwise compound-min plus log2(kp)
+    merge passes yields the sorted kp smallest of state ∪ block —
+    O(log^2 bn) passes total, independent of k (the old extract-min merge
+    paid 4 reduction passes per result slot).
     """
     bq, kp = bd.shape
-    kiota = jax.lax.broadcasted_iota(jnp.int32, (bq, kp), 1)
-    niota = jax.lax.broadcasted_iota(jnp.int32, (bq, dist.shape[1]), 1)
-    for _ in range(k):
-        bmin = jnp.min(dist, axis=1)
-        barg = jnp.argmin(dist, axis=1).astype(jnp.int32)
-        wcand = jnp.where(kiota < k, bd, -INF)  # only the k real slots
-        wmax = jnp.max(wcand, axis=1)
-        warg = jnp.argmax(wcand, axis=1).astype(jnp.int32)
-        take = bmin < wmax
-        sel = (kiota == warg[:, None]) & take[:, None]
-        bd = jnp.where(sel, bmin[:, None], bd)
-        bi = jnp.where(sel, (ids_base + barg)[:, None], bi)
-        dist = jnp.where(niota == barg[:, None], INF, dist)
-    return bd, bi
+    bn = dist.shape[1]
+    ids = ids_base + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
+    # pad lanes to a power of two (>= kp) with (+inf, INT32_MAX): the
+    # compound-largest entry, so padding can never beat a real slot
+    L = max(_next_pow2(bn), kp)
+    if L != bn:
+        dist = jnp.concatenate(
+            [dist, jnp.full((bq, L - bn), INF, dist.dtype)], axis=1)
+        ids = jnp.concatenate(
+            [ids, jnp.full((bq, L - bn), jnp.int32(2**31 - 1))], axis=1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bq, L), 1)
+    dist, ids = _bitonic_sort(dist, ids, lane, descending=True)
+    bd_blk = dist[:, L - kp:]  # kp smallest of the block, descending
+    bi_blk = ids[:, L - kp:]
+    # ascending state ++ descending block is bitonic: elementwise
+    # compound-min is the first merge stage and keeps the kp smallest
+    blk_less = (bd_blk < bd) | ((bd_blk == bd) & (bi_blk < bi))
+    d = jnp.where(blk_less, bd_blk, bd)
+    i = jnp.where(blk_less, bi_blk, bi)
+    lane_k = jax.lax.broadcasted_iota(jnp.int32, (bq, kp), 1)
+    asc = jnp.ones((bq, kp), bool)
+    stride = kp // 2
+    while stride:
+        d, i = _compare_exchange(d, i, lane_k, stride, asc)
+        stride //= 2
+    return d, i
 
 
 def _masked_rerank_kernel(
     d1_ref, d2_ref, a1_ref, a2_ref, tau_ref, th_ref, q_ref, x_ref, nrm_ref,
-    od_ref, oi_ref, bd_scr, bi_scr, *, n_sub: int, k: int, n_valid: int,
+    od_ref, oi_ref, bd_scr, bi_scr, *, n_sub: int, n_valid: int,
     bn: int, n_blocks: int
 ):
     j = pl.program_id(1)
@@ -112,7 +188,7 @@ def _masked_rerank_kernel(
     col = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
     keep = (sc >= th_ref[...][:, None]) & (col < n_valid)
     dist = jnp.where(keep, dist, INF)
-    bd, bi = _merge_topk(bd_scr[...], bi_scr[...], dist, j * bn, k)
+    bd, bi = _merge_topk(bd_scr[...], bi_scr[...], dist, j * bn)
     bd_scr[...] = bd
     bi_scr[...] = bi
 
@@ -142,18 +218,22 @@ def masked_rerank_pallas(
     bn: int = 512,
     interpret: bool = False,
 ):
-    """Unsorted per-query top-k: ((Q, kp) dists f32, (Q, kp) ids i32);
-    real entries live in the first k slots (id -1 / +inf when fewer than k
-    points pass the threshold)."""
+    """Per-query top-k state: ((Q, kp) dists f32, (Q, kp) ids i32), sorted
+    ascending by (distance, id); the first k lanes are the top-k (id -1 /
+    +inf when fewer than k points pass the threshold). ``bq``/``bn`` that
+    do not divide Q/n are auto-shrunk to the largest divisor instead of
+    crashing (direct callers with odd shapes; the padded ``ops`` wrappers
+    always pass divisible shapes)."""
     n_sub, q, sqrt_k = d1s.shape
     n, d = data.shape
-    assert q % bq == 0 and n % bn == 0, (d1s.shape, data.shape)
-    kp = -(-k // 128) * 128
+    bq = _shrink_to_divisor(q, bq)
+    bn = _shrink_to_divisor(n, bn)
+    kp = max(128, _next_pow2(k))
     n_blocks = n // bn
     grid = (q // bq, n_blocks)
     return pl.pallas_call(
         functools.partial(
-            _masked_rerank_kernel, n_sub=n_sub, k=k, n_valid=n_valid, bn=bn,
+            _masked_rerank_kernel, n_sub=n_sub, n_valid=n_valid, bn=bn,
             n_blocks=n_blocks,
         ),
         grid=grid,
@@ -192,7 +272,7 @@ def masked_rerank_pallas(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block"))
+@functools.partial(jax.jit, static_argnames=("k", "block", "precision"))
 def masked_rerank_stream(
     d1s: jax.Array,
     d2s: jax.Array,
@@ -206,9 +286,16 @@ def masked_rerank_stream(
     *,
     k: int,
     block: int = 4096,
+    precision: str = "f32",
 ):
     """Running top-k over n-blocks: ((Q, k) dists, (Q, k) ids), unsorted
-    beyond ascending-distance order from the per-block top_k merge."""
+    beyond ascending-distance order from the per-block top_k merge.
+
+    ``precision="bf16"`` rounds the matmul operands (queries once, each
+    data block inside the loop) through bfloat16 with f32 accumulation —
+    the same math as the Pallas kernel streaming bf16 tiles, so the two
+    paths stay bitwise-comparable at either precision. ``data_norms`` stay
+    exact f32 on both paths."""
     n_sub, qn_, sqrt_k = d1s.shape
     n, d = data.shape
     table = collision_table(d1s, d2s, taus)
@@ -220,6 +307,8 @@ def masked_rerank_stream(
     norms_p = jnp.pad(data_norms.astype(jnp.float32), (0, pad))
     n_blocks = cells.shape[1] // block
     queries = queries.astype(jnp.float32)
+    if precision == "bf16":
+        queries = queries.astype(jnp.bfloat16).astype(jnp.float32)
     q_norms = jnp.sum(queries * queries, axis=1)
 
     def body(b, carry):
@@ -228,6 +317,8 @@ def masked_rerank_stream(
         cells_blk = jax.lax.dynamic_slice(cells, (0, lo), (n_sub, block))
         sc = _block_sc(table, cells_blk)
         x = jax.lax.dynamic_slice(data_p, (lo, 0), (block, d))
+        if precision == "bf16":
+            x = x.astype(jnp.bfloat16).astype(jnp.float32)
         nrm = jax.lax.dynamic_slice(norms_p, (lo,), (block,))
         qdot = queries @ x.T
         dist = jnp.maximum(q_norms[:, None] - 2.0 * qdot + nrm[None, :], 0.0)

@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.l2dist import l2dist_pallas
 from repro.kernels.kmeans_assign import kmeans_assign_pallas
 from repro.kernels.masked_rerank import (
@@ -118,9 +118,14 @@ def flash_attention(q, k, v, causal: bool = True, impl: str = "auto"):
 
 
 def schist(d1s, d2s, a1s, a2s, taus, impl: str = "auto",
-           block: int = 4096) -> jax.Array:
+           block: int = 4096,
+           blocks: tuple[int, int] | None = None) -> jax.Array:
     """Streaming fused SC-score histogram (Q, N_s+1) int32 — the (Q, n) SC
-    matrix never materializes; see kernels/schist.py."""
+    matrix never materializes; see kernels/schist.py.
+
+    ``blocks`` overrides the Pallas (bq, bn) tile sizes; when None the
+    autotune cache is consulted (DEFAULT_BLOCKS if this shape was never
+    tuned — see kernels/autotune.py)."""
     n_levels = d1s.shape[0] + 1
     use_pallas, interpret = _resolve(impl)
     if not use_pallas:
@@ -128,7 +133,7 @@ def schist(d1s, d2s, a1s, a2s, taus, impl: str = "auto",
                              block=block)
     _n_sub, q, _sk = d1s.shape
     n = a1s.shape[1]
-    bq, bn = 8, 512
+    bq, bn = blocks or autotune.get_blocks("schist", q=q, n=n)
     d1p = _pad_axis(_pad_axis(d1s.astype(jnp.float32), 1, bq), 2, 128)
     d2p = _pad_axis(_pad_axis(d2s.astype(jnp.float32), 1, bq), 2, 128)
     a1p = _pad_axis(a1s.astype(jnp.int32), 1, bn)
@@ -140,20 +145,35 @@ def schist(d1s, d2s, a1s, a2s, taus, impl: str = "auto",
 
 
 def masked_rerank(d1s, d2s, a1s, a2s, taus, thresh, data, data_norms,
-                  queries, k: int, impl: str = "auto", block: int = 4096):
+                  queries, k: int, impl: str = "auto", block: int = 4096,
+                  blocks: tuple[int, int] | None = None,
+                  precision: str = "f32"):
     """Streaming masked full-matmul re-rank: ((Q, k) ids i32, (Q, k) exact
     sq dists f32), no candidate cap and no (Q, n)/(Q, cap, d) intermediate;
-    see kernels/masked_rerank.py."""
+    see kernels/masked_rerank.py.
+
+    ``blocks`` overrides the Pallas (bq, bn) tile sizes (autotune cache
+    consulted when None). ``precision="bf16"`` streams bfloat16 query/data
+    tiles (f32 accumulation): the Pallas path stores actual bf16 buffers
+    (the kernel upcasts per tile), the jnp path rounds the same operands
+    through bf16 — both select candidates from identical rounded math, and
+    finalize_topk recomputes the returned distances in exact f32 either
+    way."""
     use_pallas, interpret = _resolve(impl)
     if not use_pallas:
         bd, bi = masked_rerank_stream(
             d1s, d2s, a1s, a2s, taus, thresh, queries, data, data_norms,
-            k=k, block=block,
+            k=k, block=block, precision=precision,
         )
         return finalize_topk(bd, bi, data, queries, k)
     _n_sub, q, _sk = d1s.shape
     n = data.shape[0]
-    bq, bn = 8, 512
+    bq, bn = blocks or autotune.get_blocks("masked_rerank", precision,
+                                           q=q, n=n)
+    if precision == "bf16":
+        # bf16 tiles pack (16, 128) per sublane-register: keep bq at the
+        # native packing to avoid sub-tile strided loads.
+        bq = max(bq, 16)
     d1p = _pad_axis(_pad_axis(d1s.astype(jnp.float32), 1, bq), 2, 128)
     d2p = _pad_axis(_pad_axis(d2s.astype(jnp.float32), 1, bq), 2, 128)
     a1p = _pad_axis(a1s.astype(jnp.int32), 1, bn)
@@ -163,6 +183,9 @@ def masked_rerank(d1s, d2s, a1s, a2s, taus, thresh, data, data_norms,
     qp = _pad_axis(_pad_axis(queries.astype(jnp.float32), 0, bq), 1, 128)
     xp = _pad_axis(_pad_axis(data.astype(jnp.float32), 0, bn), 1, 128)
     nrmp = _pad_axis(data_norms.astype(jnp.float32), 0, bn)
+    if precision == "bf16":
+        qp = qp.astype(jnp.bfloat16)
+        xp = xp.astype(jnp.bfloat16)
     bd, bi = masked_rerank_pallas(
         d1p, d2p, a1p, a2p, taup, thp, qp, xp, nrmp,
         k=k, n_valid=n, bq=bq, bn=bn, interpret=interpret,

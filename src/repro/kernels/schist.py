@@ -36,6 +36,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _shrink_to_divisor(total: int, b: int) -> int:
+    """Largest block size <= b that divides total (>= 1): lets direct kernel
+    callers use odd shapes without pre-padding — the block simply shrinks
+    instead of the old hard divisibility assert crashing."""
+    b = max(1, min(b, total))
+    while total % b:
+        b -= 1
+    return b
+
+
 def block_sc_scores(d1_ref, d2_ref, a1_ref, a2_ref, tau_ref, *, n_sub: int,
                     bq: int, bn: int) -> jax.Array:
     """In-kernel (bq, bn) SC-score tile via the one-hot-matmul collision
@@ -103,10 +113,12 @@ def schist_pallas(
     interpret: bool = False,
 ) -> jax.Array:
     """Per-query SC-score histogram (Q, hw) with hw one lane tile wide;
-    real counts live in columns [0, n_levels)."""
+    real counts live in columns [0, n_levels). Non-divisible ``bq``/``bn``
+    auto-shrink to the largest divisor (see :func:`_shrink_to_divisor`)."""
     n_sub, q, sqrt_k = d1s.shape
     n = a1s.shape[1]
-    assert q % bq == 0 and n % bn == 0, (d1s.shape, a1s.shape)
+    bq = _shrink_to_divisor(q, bq)
+    bn = _shrink_to_divisor(n, bn)
     assert n_levels <= 128, n_levels
     hw = 128
     grid = (q // bq, n // bn)  # point blocks innermost: o block revisited

@@ -1140,4 +1140,13 @@ class AnnServingEngine:
                 out["combine_pairs_per_query"] = self._combine_pairs / executed
         if self._pool is not None:
             out["worker_pool"] = self._pool.stats()
+        # Lock-discipline counters from the runtime checker — surfaced here
+        # so operators see JAX-dispatch-under-lock regressions in the same
+        # place as latency. Read AFTER self._lock is released: the registry
+        # takes its own mutex and must never nest under the engine lock.
+        from repro.analysis.lockcheck import registry
+
+        lk = registry().report()
+        out["jax_dispatch_under_lock"] = lk["jax_dispatch_under_lock"]
+        out["jax_seconds_under_lock"] = lk["jax_seconds_under_lock"]
         return out

@@ -10,6 +10,7 @@ from repro.core.activation import (
     heap_activation,
     linear_activation,
     sort_activation,
+    sort_activation_lax,
 )
 from repro.core.heap import heap_make, heap_pop, heap_push, heap_top
 
@@ -92,6 +93,44 @@ def test_property_sort_activation(sqrt_k, alpha_n, seed):
     )
     assert float(ret) == pytest.approx(ret_ref)
     assert float(tau) == pytest.approx(tau_ref, rel=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(2, 16),
+    st.integers(1, 5000),
+    st.integers(0, 2**31 - 1),
+)
+def test_bisect_bitwise_equals_lax_sort(sqrt_k, alpha_n, seed):
+    """The bit-lattice bisection (sort_activation) is BITWISE-equal to the
+    direct sort+prefix-sum formulation (sort_activation_lax) — tau down to
+    the last ulp, retrieved exactly, ties included."""
+    rng = np.random.default_rng(seed)
+    d1, d2, sizes = _random_case(rng, sqrt_k, 800)
+    a = jax.jit(sort_activation)(
+        jnp.asarray(d1), jnp.asarray(d2), jnp.asarray(sizes), float(alpha_n))
+    b = jax.jit(sort_activation_lax)(
+        jnp.asarray(d1), jnp.asarray(d2), jnp.asarray(sizes), float(alpha_n))
+    assert np.asarray(a[0]).tobytes() == np.asarray(b[0]).tobytes()
+    assert float(a[1]) == float(b[1])
+
+
+def test_bisect_bitwise_on_tie_heavy_sums():
+    """Integer-valued distances force massive exact tie groups in the outer
+    sums; the bisection's tie-group cumsum must replay the stable sort."""
+    rng = np.random.default_rng(13)
+    for trial in range(10):
+        sqrt_k = int(rng.integers(2, 12))
+        d1 = rng.integers(0, 4, sqrt_k).astype(np.float32)
+        d2 = rng.integers(0, 4, sqrt_k).astype(np.float32)
+        _d1, _d2, sizes = _random_case(rng, sqrt_k, 500)
+        alpha_n = float(rng.uniform(0.5, 600))
+        a = sort_activation(
+            jnp.asarray(d1), jnp.asarray(d2), jnp.asarray(sizes), alpha_n)
+        b = sort_activation_lax(
+            jnp.asarray(d1), jnp.asarray(d2), jnp.asarray(sizes), alpha_n)
+        assert np.asarray(a[0]).tobytes() == np.asarray(b[0]).tobytes()
+        assert float(a[1]) == float(b[1])
 
 
 class TestHeap:

@@ -211,6 +211,22 @@ def test_telemetry_counters_consistent(served_index):
     assert all(r.latency_s > 0 for r in results)
 
 
+def test_telemetry_surfaces_lockcheck_counters(served_index):
+    """Lock-discipline counters (runtime checker, analysis/lockcheck) ride
+    along in telemetry(): present, well-typed, and consistent — dispatch
+    count zero implies zero seconds under lock."""
+    index, cfg, queries = served_index
+    engine = _fresh_engine(index, cfg, max_batch=4)
+    engine.search([AnnRequest(query=q) for q in queries[:4]])
+    t = engine.telemetry()
+    assert isinstance(t["jax_dispatch_under_lock"], int)
+    assert isinstance(t["jax_seconds_under_lock"], float)
+    assert t["jax_dispatch_under_lock"] >= 0
+    assert t["jax_seconds_under_lock"] >= 0.0
+    if t["jax_dispatch_under_lock"] == 0:
+        assert t["jax_seconds_under_lock"] == 0.0
+
+
 # ------------------------------------------------------- index lifecycle --
 def test_swap_index_on_live_engine(served_index, small_dataset):
     """swap_index: atomic between drains, monotonic generation, cache

@@ -1,0 +1,102 @@
+"""Block-size autotuner (ISSUE 8): cache semantics, search harness, JSON
+persistence, and the ops-wrapper consult path (kernels/autotune.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops, ref
+from tests.test_masked_rerank import _case
+
+
+@pytest.fixture(autouse=True)
+def _clean_cache():
+    autotune.clear_cache()
+    yield
+    autotune.clear_cache()
+
+
+def test_get_blocks_defaults_without_search():
+    """A never-tuned key is a pure lookup miss: DEFAULT_BLOCKS, and the
+    cache stays empty (get never searches)."""
+    assert autotune.get_blocks("schist", q=8, n=4096) == autotune.DEFAULT_BLOCKS
+    assert autotune._CACHE == {}
+
+
+def test_set_get_roundtrip_and_shape_bucketing():
+    autotune.set_blocks("masked_rerank", (16, 1024), q=16, n=100_000)
+    # pow2 bucketing: nearby shapes share the winner...
+    assert autotune.get_blocks("masked_rerank", q=10, n=70_000) == (16, 1024)
+    # ...distant shapes do not
+    assert autotune.get_blocks("masked_rerank", q=10, n=2048) == \
+        autotune.DEFAULT_BLOCKS
+    # precision is part of the key
+    assert autotune.get_blocks("masked_rerank", "bf16", q=16, n=100_000) == \
+        autotune.DEFAULT_BLOCKS
+
+
+def test_autotune_search_installs_winner():
+    res = autotune.autotune("schist", q=8, n=512, budget_s=5.0, impl="jnp")
+    assert tuple(res["winner"]) == autotune.get_blocks("schist", q=8, n=512)
+    assert res["winner_us"] <= res["default_us"]
+    assert res["trials"][0]["blocks"] == list(autotune.DEFAULT_BLOCKS)
+    assert 1 <= len(res["trials"]) <= len(autotune.CANDIDATES)
+
+
+def test_autotune_tiny_budget_still_yields_winner():
+    """Budget exhausted after the default measurement: the default IS the
+    winner — a deadline can never leave the cache without an entry."""
+    res = autotune.autotune("masked_rerank", q=8, n=256, budget_s=0.0,
+                            impl="jnp")
+    assert len(res["trials"]) == 1
+    assert tuple(res["winner"]) == autotune.DEFAULT_BLOCKS
+
+
+def test_autotune_rejects_unknown_op():
+    with pytest.raises(ValueError, match="unknown autotune op"):
+        autotune.autotune("l2dist")
+
+
+def test_json_cache_roundtrip(tmp_path):
+    autotune.set_blocks("schist", (8, 1024), q=16, n=8192, backend="cpu")
+    autotune.set_blocks("masked_rerank", (32, 512), "bf16", q=8, n=4096,
+                        backend="tpu")
+    path = str(tmp_path / "blocks.json")
+    autotune.save_cache(path)
+    autotune.clear_cache()
+    assert autotune._CACHE == {}
+    assert autotune.load_cache(path) == 2
+    assert autotune._CACHE[("schist", "cpu", "f32", 16, 8192)] == (8, 1024)
+    assert autotune._CACHE[("masked_rerank", "tpu", "bf16", 8, 4096)] == \
+        (32, 512)
+
+
+def test_ops_consults_tuned_blocks():
+    """The wrapper routes through the tuned (bq, bn) — results stay bitwise
+    equal to the oracle under a non-default winner."""
+    rng = np.random.default_rng(21)
+    d1s, d2s, a1s, a2s, taus, thresh, data, norms, queries = _case(
+        rng, 3, 8, 16, 512)
+    autotune.set_blocks("schist", (16, 256), q=8, n=512)
+    autotune.set_blocks("masked_rerank", (8, 256), q=8, n=512)
+    got = ops.schist(d1s, d2s, a1s, a2s, taus, impl="pallas")
+    want = ref.schist_ref(d1s, d2s, a1s, a2s, taus, 4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    gi, gd = ops.masked_rerank(d1s, d2s, a1s, a2s, taus, thresh, data, norms,
+                               queries, 10, impl="pallas")
+    wi, wd = ref.masked_rerank_ref(d1s, d2s, a1s, a2s, taus, thresh, queries,
+                                   data, norms, 10)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+
+
+def test_cli_writes_json(tmp_path):
+    path = str(tmp_path / "report.json")
+    rc = autotune.main(["--ops", "schist", "--budget", "1", "--q", "4",
+                        "--n", "256", "--impl", "jnp", "--json", path])
+    assert rc == 0
+    import json
+
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["results"][0]["op"] == "schist"
+    assert payload["cache"]

@@ -1,0 +1,88 @@
+"""Collision-input hoisting (ISSUE 8): the per-snapshot cache of stacked
+cell-assignment tensors (core.taco.collision_constants)."""
+import gc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build, query_with_stats, taco_config
+from repro.core.taco import (
+    _COLLISION_CACHE,
+    _collision_inputs,
+    collision_constants,
+)
+
+CFG = dict(n_subspaces=3, subspace_dim=6, n_clusters=64, alpha=0.08,
+           beta=0.03, k=5, rerank="masked_full")
+
+
+def _small_index(seed=0, n=1200):
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal((n, 24)).astype(np.float32)
+    return build(data, taco_config(**CFG)), rng.standard_normal(
+        (4, 24)).astype(np.float32)
+
+
+def test_cache_hit_returns_same_arrays():
+    idx, _q = _small_index()
+    a = collision_constants(idx)
+    b = collision_constants(idx)
+    assert a[0] is b[0] and a[1] is b[1]  # no restack on the hot path
+    np.testing.assert_array_equal(
+        np.asarray(a[0]), np.stack([np.asarray(s.assign1)
+                                    for s in idx.subspaces]))
+
+
+def test_hoisted_equals_inline():
+    """hoist=True and hoist=False produce identical collision inputs, and
+    end-to-end query results are unchanged by the cache."""
+    idx, queries = _small_index(1)
+    cfg = taco_config(**CFG)
+    r_hoist = _collision_inputs(idx, jnp.asarray(queries), cfg, hoist=True)
+    r_inline = _collision_inputs(idx, jnp.asarray(queries), cfg, hoist=False)
+    for x, y in zip(r_hoist, r_inline):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    ids, dists, _ = query_with_stats(idx, queries, cfg)
+    assert np.asarray(ids).shape == (4, cfg.k)
+
+
+def test_distinct_snapshots_get_distinct_entries():
+    idx1, _ = _small_index(2, n=800)
+    idx2, _ = _small_index(3, n=900)
+    a1 = collision_constants(idx1)
+    a2 = collision_constants(idx2)
+    assert a1[0] is not a2[0]
+    assert a1[0].shape != a2[0].shape  # different n: really different data
+
+
+def test_cache_evicts_dead_snapshots():
+    """The weakref callback drops the entry when the index dies — retired
+    snapshots (e.g. after an engine swap_index) cannot pin their assignment
+    stacks forever."""
+    idx, _q = _small_index(4, n=600)
+    key = id(idx)
+    collision_constants(idx)
+    assert key in _COLLISION_CACHE
+    del idx
+    gc.collect()
+    assert key not in _COLLISION_CACHE
+
+
+def test_tracer_bypass_under_jit():
+    """Inside a trace the assignments are tracers: the cache must be
+    bypassed (inline stack) and the jit result must match eager."""
+    idx, queries = _small_index(5, n=700)
+    cfg = taco_config(**CFG)
+    eager = collision_constants(idx)
+
+    @jax.jit
+    def traced(subidx):
+        a1s, a2s = collision_constants(subidx)
+        return a1s.sum() + a2s.sum()
+
+    before = dict(_COLLISION_CACHE)
+    got = traced(idx)
+    assert list(_COLLISION_CACHE) == list(before)  # no tracer cached
+    want = eager[0].sum() + eager[1].sum()
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,98 @@
+"""Bitonic top-k merge (ISSUE 8 tentpole): pallas-vs-oracle bitwise sweeps
+for the sorted-run merge that replaced the k-round extract-min in
+kernels/masked_rerank.py.
+
+Integer-valued vectors make squared distances exactly representable in
+float32, so every comparison is bitwise (see test_masked_rerank.py). The
+sweeps specifically target what the merge changed: large k (the old merge
+paid 4 reduction passes per slot — these run in log passes), duplicate
+distances (compound (dist, id) tie order), fewer valid points than k
+(the (+inf, -1) empty-slot layout), and non-default (bq, bn) grids (the
+autotuner's candidate shapes).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from tests.test_masked_rerank import _case
+
+
+@pytest.mark.parametrize("k", [10, 50, 100])
+def test_merge_matches_oracle_large_k(k):
+    rng = np.random.default_rng(k)
+    d1s, d2s, a1s, a2s, taus, thresh, data, norms, queries = _case(
+        rng, 4, 6, 16, 700)
+    gi, gd = ops.masked_rerank(d1s, d2s, a1s, a2s, taus, thresh, data, norms,
+                               queries, k, impl="pallas")
+    wi, wd = ref.masked_rerank_ref(d1s, d2s, a1s, a2s, taus, thresh, queries,
+                                   data, norms, k)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+
+
+def test_merge_duplicate_distance_ties():
+    """Many points at EXACTLY equal distances: the merge must resolve every
+    tie to the lowest id (compound key == the old keep-incumbent rule)."""
+    rng = np.random.default_rng(3)
+    d1s, d2s, a1s, a2s, taus, _th, _data, _norms, queries = _case(
+        rng, 3, 5, 8, 600, d=8)
+    # 600 points drawn from only 12 distinct rows -> massive exact-distance
+    # tie groups at every rank
+    base = rng.integers(-4, 5, (12, 8)).astype(np.float32)
+    data = jnp.asarray(base[rng.integers(0, 12, 600)])
+    norms = jnp.sum(data * data, axis=1)
+    thresh = jnp.zeros((5,), jnp.int32)  # everyone passes: ties decide all
+    gi, gd = ops.masked_rerank(d1s, d2s, a1s, a2s, taus, thresh, data, norms,
+                               queries, 20, impl="pallas")
+    wi, wd = ref.masked_rerank_ref(d1s, d2s, a1s, a2s, taus, thresh, queries,
+                                   data, norms, 20)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+    # ties really are exercised AND resolved id-ascending
+    gd_np, gi_np = np.asarray(gd), np.asarray(gi)
+    assert (gd_np[:, 1:] == gd_np[:, :-1]).any(), "no exact ties exercised"
+    same = gd_np[:, 1:] == gd_np[:, :-1]
+    assert (gi_np[:, 1:][same] > gi_np[:, :-1][same]).all()
+
+
+def test_merge_k_exceeds_valid_points():
+    """thresh == n_sub + 1 passes nobody: all k slots must come back as the
+    (+inf, -1) empty layout, never a masked point's real id."""
+    rng = np.random.default_rng(11)
+    n_sub = 3
+    d1s, d2s, a1s, a2s, taus, _th, data, norms, queries = _case(
+        rng, n_sub, 4, 8, 300)
+    thresh = jnp.full((4,), n_sub + 1, jnp.int32)
+    gi, gd = ops.masked_rerank(d1s, d2s, a1s, a2s, taus, thresh, data, norms,
+                               queries, 50, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(gi), -1)
+    assert np.isinf(np.asarray(gd)).all()
+    # and the partially-empty case: a mid threshold leaves SOME queries with
+    # fewer than k survivors — oracle agreement covers the mixed layout
+    thresh2 = jnp.asarray([0, n_sub, n_sub + 1, 1], jnp.int32)
+    gi2, gd2 = ops.masked_rerank(d1s, d2s, a1s, a2s, taus, thresh2, data,
+                                 norms, queries, 50, impl="pallas")
+    wi2, wd2 = ref.masked_rerank_ref(d1s, d2s, a1s, a2s, taus, thresh2,
+                                     queries, data, norms, 50)
+    np.testing.assert_array_equal(np.asarray(gi2), np.asarray(wi2))
+    np.testing.assert_array_equal(np.asarray(gd2), np.asarray(wd2))
+
+
+@pytest.mark.parametrize("blocks", [(8, 256), (16, 512)])
+def test_merge_under_autotuner_grids(blocks):
+    """The merge is bitwise-stable across the autotuner's candidate (bq, bn)
+    shapes — a tuned deployment returns the same results as the default."""
+    rng = np.random.default_rng(sum(blocks))
+    d1s, d2s, a1s, a2s, taus, thresh, data, norms, queries = _case(
+        rng, 4, 16, 16, 1030)
+    gi, gd = ops.masked_rerank(d1s, d2s, a1s, a2s, taus, thresh, data, norms,
+                               queries, 17, impl="pallas", blocks=blocks)
+    wi, wd = ref.masked_rerank_ref(d1s, d2s, a1s, a2s, taus, thresh, queries,
+                                   data, norms, 17)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+    # schist under the same grids
+    hs = ops.schist(d1s, d2s, a1s, a2s, taus, impl="pallas", blocks=blocks)
+    hw = ref.schist_ref(d1s, d2s, a1s, a2s, taus, d1s.shape[0] + 1)
+    np.testing.assert_array_equal(np.asarray(hs), np.asarray(hw))
