@@ -22,9 +22,13 @@ initializes — hence the deferred imports). ``--producers P`` also times
 the async pipeline: P concurrent threads submitting to the background
 drain worker (per-request futures, ``--deadline-ms`` SLOs), recording
 async-vs-sync QPS/p99 plus queue-depth / deadline-miss / shed stats.
-``--json PATH`` persists the numbers (QPS, p50/p99, stage timings) for
-trend tracking — the committed baseline lives at BENCH_serving.json in
-the repo root.
+``--churn M`` benches a mixed
+query/mutation workload three times — ``durability="none"``, ``"async"``
+(WAL group-commit via the shared worker pool), ``"sync"`` (fsync on the
+caller's path) — so the cost of crash safety is a number, not a guess
+(the acceptance bar: async within 15% of none). ``--json PATH``
+persists the numbers (QPS, p50/p99, stage timings) for trend tracking —
+the committed baseline lives at BENCH_serving.json in the repo root.
 
   PYTHONPATH=src python benchmarks/bench_serving.py [--n 20000] [--d 64] \
       [--requests 32] [--pressure 16] [--shards 4] [--json BENCH_serving.json]
@@ -223,27 +227,56 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
     # --- churn: mixed query/insert/delete workload through a mutable
     # index (delta scan + tombstone mask + policy-driven compaction) ------
     churn_t = None
+    churn_qps: dict = {}
+    churn_wal_t = None
     if churn > 0:
+        import tempfile
+
         from repro.ann import CompactionPolicy
         from repro.ann.mutable import churn_wave
 
-        mutable = ann.mutable(
-            policy=CompactionPolicy(max_delta_rows=max(8, 4 * churn))
-        )
-        churn_engine = mutable.engine(max_batch=max(pressure, 1))
-        churn_engine.search([AnnRequest(query=q) for q in qs[:pressure]])
-        churn_engine.reset_telemetry()
-        churn_rng = np.random.default_rng(seed + 7)
-        live_new: list = []
-        t0 = time.perf_counter()
-        for lo in range(0, requests, pressure):
-            churn_wave(mutable, churn_rng, live_new, churn, engine=churn_engine)
-            churn_engine.search(
-                [AnnRequest(query=q) for q in qs[lo : lo + pressure]]
+        reps = 5  # repeat the wave loop so the per-mode timing is not
+        # dominated by one fsync's scheduling noise; qps stays per-request
+
+        def run_churn(durability, wal_dir=None):
+            mutable = ann.mutable(
+                policy=CompactionPolicy(max_delta_rows=max(8, 4 * churn)),
+                durability=durability, wal_dir=wal_dir,
             )
-        churn_s = time.perf_counter() - t0
+            try:
+                c_engine = mutable.engine(max_batch=max(pressure, 1))
+                c_engine.search([AnnRequest(query=q) for q in qs[:pressure]])
+                c_engine.reset_telemetry()
+                churn_rng = np.random.default_rng(seed + 7)
+                live_new: list = []
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    for lo in range(0, requests, pressure):
+                        churn_wave(mutable, churn_rng, live_new, churn,
+                                   engine=c_engine)
+                        c_engine.search(
+                            [AnnRequest(query=q) for q in qs[lo : lo + pressure]]
+                        )
+                elapsed = (time.perf_counter() - t0) / reps
+                return c_engine.telemetry(), elapsed
+            finally:
+                mutable.close()  # flushes + closes the WAL on any exit
+
+        run_churn("none")  # absorb the delta-scan jit compiles untimed, so
+        # the three timed rows below are comparable (first-run bias)
+        churn_t, churn_s = run_churn("none")
         rows.append((f"engine-churn{churn}", churn_s))
-        churn_t = churn_engine.telemetry()
+        churn_qps["none"] = requests / churn_s
+        # durability overhead: the same workload journaled through the WAL.
+        # TemporaryDirectory as a context manager guarantees the WAL dirs
+        # are removed even if a wave raises (no stranded temp dirs).
+        for mode in ("async", "sync"):
+            with tempfile.TemporaryDirectory(prefix=f"bench-wal-{mode}-") as wd:
+                mode_t, mode_s = run_churn(mode, wal_dir=wd)
+            rows.append((f"engine-churn{churn}-{mode}", mode_s))
+            churn_qps[mode] = requests / mode_s
+            if mode == "async":
+                churn_wal_t = mode_t
 
     stages = stage_timings(index, cfg, qs[:pressure])
     t = engine.telemetry()
@@ -279,6 +312,12 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
               f"{churn_t['index_swaps']} swaps  "
               f"{ms['n_live']} live ({ms['n_delta_live']} delta, "
               f"{ms['n_tombstones']} tombstones)")
+        w = (churn_wal_t or {}).get("wal")
+        print(f"  churn durability qps: "
+              + "  ".join(f"{m} {q:.0f}" for m, q in churn_qps.items())
+              + (f"  (async group-commit mean {w['mean_group']:.1f}, "
+                 f"{w['fsyncs']} fsyncs / {w['appends']} appends)"
+                 if w else ""))
     print(f"  speedup vs adhoc : {adhoc_s / engine_s:7.2f}x")
     print(f"  speedup vs cached: {cached_s / engine_s:7.2f}x")
     print(f"  masked vs gather : {engine_s / masked_s:7.2f}x")
@@ -329,7 +368,15 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
                 "compactions": churn_t["mutable"]["compactions"],
                 "index_swaps": churn_t["index_swaps"],
                 "n_live": churn_t["mutable"]["n_live"],
+                "qps_by_durability": churn_qps,
+                "async_vs_none_qps": churn_qps["async"] / churn_qps["none"],
             }
+            if churn_wal_t is not None and "wal" in churn_wal_t:
+                payload["churn"]["wal_async"] = {
+                    k2: churn_wal_t["wal"][k2]
+                    for k2 in ("appends", "fsyncs", "group_commits",
+                               "mean_group", "max_group", "bytes_appended")
+                }
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2, default=float)
         print(f"wrote {json_path}")

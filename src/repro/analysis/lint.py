@@ -21,9 +21,13 @@ L002  a non-reentrant ``Lock``/``Condition(Lock())`` is re-acquired inside
 B001  blocking call in a lock-held region: JAX dispatch (any ``jax.``/
       ``jnp.`` computation, ``block_until_ready``, applying a jitted
       callable), ``Future``/``WorkTask.result()``, ``queue.get``,
-      ``time.sleep`` or thread ``join`` reached — directly or through
-      resolved calls — while a lock is held. A serving thread stalled
-      under a lock stalls every producer behind it.
+      ``time.sleep``, thread ``join``, or file I/O (``os.fsync``/
+      ``os.write``, file ``write()``/``flush()``) reached — directly or
+      through resolved calls — while a lock is held. A serving thread
+      stalled under a lock stalls every producer behind it; an fsync
+      under a lock turns every appender into a disk wait. The WAL
+      (:mod:`repro.ann.wal`) passes this rule by design: appends are
+      memory-only under its mutex and the flusher writes after release.
 W001  ``time.time()`` used for durations/deadlines: wall clock steps on
       NTP adjustment; use ``time.monotonic()`` (deadlines) or
       ``time.perf_counter()`` (elapsed measurement).
@@ -60,7 +64,7 @@ from pathlib import Path
 RULES = {
     "L001": "lock-order cycle in the static acquisition graph",
     "L002": "non-reentrant lock re-acquired while already held",
-    "B001": "blocking call / JAX dispatch in a lock-held region",
+    "B001": "blocking call / JAX dispatch / file I/O in a lock-held region",
     "W001": "time.time() used for durations or deadlines",
     "T001": "thread neither daemon nor provably joined",
     "T002": "lock created outside __init__",
@@ -548,6 +552,13 @@ class LockAnalysis:
             return f"{dotted}() blocks on device work"
         if root == "time" and attr == "sleep":
             return "time.sleep() under a lock stalls every waiter"
+        # file I/O under a lock (the WAL-fsync rule): a write/flush/fsync
+        # can stall on the disk for milliseconds — group-commit designs
+        # must claim a baton and drop the lock before touching the file
+        if root == "os" and attr in ("fsync", "fdatasync", "write", "pwrite"):
+            return f"{dotted}() is file I/O"
+        if attr in ("write", "flush") and len(chain) >= 2:
+            return f"{dotted}() is file I/O"
         if attr == "result" and len(chain) >= 2:
             return f"{dotted}() blocks on a future/task"
         if attr == "get" and len(chain) >= 2 and "queue" in chain[-2].lower():

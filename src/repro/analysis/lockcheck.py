@@ -302,6 +302,7 @@ _TARGET_MODULES = (
     "repro.serving.ann_engine",
     "repro.serving.scheduler",
     "repro.ann.mutable",
+    "repro.ann.wal",
     "repro.checkpoint.checkpoint",
 )
 

@@ -18,6 +18,11 @@ Mutation rides the same facade (:mod:`repro.ann.mutable` /
                                            #   swap on a live engine
     mutable.save(path)                     # ONE-commit base+delta+tombstones
 
+Durability (:mod:`repro.ann.wal`)::
+
+    mutable = index.mutable(durability="sync", wal_dir=wal)  # crash-safe
+    MutableAnnIndex.load(path, wal_dir=wal)  # snapshot + WAL replay
+
 The legacy free functions (``repro.core.build`` / ``query`` /
 ``query_with_stats`` / ``make_query_fn``) and the engine backend kwargs
 remain supported; they run through the same machinery this package fronts.
@@ -38,20 +43,25 @@ from repro.ann.searcher import (
 )
 from repro.ann.compaction import CompactionPolicy, CompactionReport
 from repro.ann.mutable import MutableAnnIndex, MutableSearcher
+from repro.ann.wal import FaultInjectingFile, WalRecord, WriteAheadLog, read_wal
 
 __all__ = [
     "AnnBatchResult",
     "AnnIndex",
     "CompactionPolicy",
     "CompactionReport",
+    "FaultInjectingFile",
     "MutableAnnIndex",
     "MutableSearcher",
     "Searcher",
     "ShardedSearcher",
     "SingleDeviceSearcher",
+    "WalRecord",
+    "WriteAheadLog",
     "load_index",
     "load_mutable_index",
     "make_searcher",
+    "read_wal",
     "save_index",
     "save_mutable_index",
 ]

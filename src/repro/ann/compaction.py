@@ -112,6 +112,12 @@ def _run_to_install(mutable, snap, vecs, ids, *, engine, reason, t0) -> Compacti
     reclaimed, replayed = mutable._finish_compaction(
         base, vecs, ids, engine=engine, snapshot=snap
     )
+    if mutable._wal is not None and mutable._checkpoint_path is not None:
+        # the install marker is in the log; persisting the post-install
+        # snapshot moves the watermark past it, so checkpoint() rotates
+        # the active segment and retires everything the snapshot covers —
+        # the log stays bounded to one churn epoch
+        mutable.checkpoint()
     duration = time.perf_counter() - t0
     mutable._last_compaction_s = duration
     return CompactionReport(

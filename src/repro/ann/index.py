@@ -75,6 +75,7 @@ class AnnIndex:
         query_axes=(),
         max_cached_fns: int = 64,
         cfg: SCConfig | None = None,
+        autotune_cache: str | None = None,
     ) -> Searcher:
         """A :class:`Searcher` over this index — owns device placement and
         the ``(bucket, k, cfg)`` executable cache. ``cfg`` overrides the
@@ -89,6 +90,7 @@ class AnnIndex:
             data_axes=data_axes,
             query_axes=query_axes,
             max_cached_fns=max_cached_fns,
+            autotune_cache=autotune_cache,
         )
 
     def engine(
@@ -149,15 +151,16 @@ class AnnIndex:
         )
 
     # ------------------------------------------------------------ mutation --
-    def mutable(self, *, policy=None):
+    def mutable(self, *, policy=None, **kwargs):
         """Wrap this (immutable) index as the base segment of a
         :class:`~repro.ann.mutable.MutableAnnIndex`: delta-segment inserts,
         tombstone deletes, policy-driven compaction back into a fresh base,
         and atomic swap into live serving engines. The built index is
-        shared, not copied."""
+        shared, not copied. Durability kwargs (``durability=``,
+        ``wal_dir=``) pass through — see :mod:`repro.ann.wal`."""
         from repro.ann.mutable import MutableAnnIndex
 
-        return MutableAnnIndex(self, policy=policy)
+        return MutableAnnIndex(self, policy=policy, **kwargs)
 
     # ------------------------------------------------------------- props --
     @property

@@ -42,6 +42,15 @@ Serving: :meth:`engine` wraps a :class:`MutableSearcher` in an
 :class:`~repro.serving.ann_engine.AnnServingEngine` wired for churn —
 every mutation bumps the engine's ``index_generation`` and drops its
 result cache, and the engine's recall probes sample the live corpus.
+
+Durability (:mod:`repro.ann.wal`): with ``durability="sync"`` or
+``"async"`` every mutation appends a checksummed record to a durable
+write-ahead log *before* the state snapshot is installed — the append is
+memory-only under the lock, the fsync happens on the caller's path
+(sync) or via a group-commit flusher task on the shared WorkerPool
+(async), never under the index lock. A kill -9 mid-churn replays the
+log past the last snapshot's watermark back to the pre-crash state (see
+:func:`repro.ann.persistence.load_mutable_index`).
 """
 from __future__ import annotations
 
@@ -391,6 +400,10 @@ class MutableAnnIndex:
         cfg: SCConfig | None = None,
         dim: int | None = None,
         policy: CompactionPolicy | None = None,
+        durability: str = "none",
+        wal_dir: str | None = None,
+        wal=None,
+        wal_segment_bytes: int | None = None,
     ):
         if base is not None:
             cfg = base.cfg if cfg is None else cfg
@@ -399,6 +412,27 @@ class MutableAnnIndex:
             raise ValueError("cfg is required when no base index is given")
         if dim is None:
             raise ValueError("dim is required when no base index is given")
+        from repro.ann.wal import DURABILITY_MODES, WriteAheadLog
+
+        if durability not in DURABILITY_MODES:
+            raise ValueError(
+                f"durability={durability!r} (want one of {DURABILITY_MODES})"
+            )
+        if durability != "none" and wal is None and wal_dir is None:
+            raise ValueError(f"durability={durability!r} requires wal_dir")
+        if durability == "none" and (wal is not None or wal_dir is not None):
+            raise ValueError("a WAL was given but durability='none'")
+        self.durability = durability
+        if wal is not None:
+            self._wal = wal
+        elif wal_dir is not None:
+            kw = {} if wal_segment_bytes is None else {
+                "segment_bytes": wal_segment_bytes
+            }
+            self._wal = WriteAheadLog(wal_dir, **kw)
+        else:
+            self._wal = None
+        self._checkpoint_path: str | None = None
         self.cfg = cfg
         self.d = int(dim)
         self.policy = CompactionPolicy() if policy is None else policy
@@ -441,9 +475,17 @@ class MutableAnnIndex:
             ids = np.arange(self._next_id, self._next_id + v.shape[0],
                             dtype=np.int32)
             self._next_id += v.shape[0]
+            lsn = None
+            if self._wal is not None:
+                # append BEFORE apply (memory only under the lock) so the
+                # log order is exactly the apply order
+                lsn = self._wal.append_insert(
+                    ids, v, generation=self.generation + 1
+                )
             if self._log is not None:
                 self._log.append(("insert", v, ids))
             engines = self._install(_state_insert(self._state, v, ids))
+        self._wal_commit(lsn)
         self._notify_engines(engines)
         return ids
 
@@ -454,11 +496,29 @@ class MutableAnnIndex:
         arr = np.atleast_1d(np.asarray(ids, np.int64))
         with self._lock:
             new = _state_delete(self._state, arr)  # raises before any change
+            lsn = None
+            if self._wal is not None:
+                lsn = self._wal.append_delete(
+                    arr, generation=self.generation + 1
+                )
             if self._log is not None:
                 self._log.append(("delete", arr.copy()))
             engines = self._install(new)
+        self._wal_commit(lsn)
         self._notify_engines(engines)
         return int(arr.size)
+
+    def _wal_commit(self, lsn) -> None:
+        """Durability step for one appended record, run AFTER the index
+        lock is released: ``sync`` flushes + fsyncs on this (the caller's)
+        thread, ``async`` schedules a coalesced group commit on the shared
+        WorkerPool. File I/O never happens under ``self._lock``."""
+        if lsn is None or self._wal is None:
+            return
+        if self.durability == "sync":
+            self._wal.flush(lsn)
+        else:
+            self._wal.kick()
 
     def _install(self, st: _State) -> list:
         """Atomically publish a new state snapshot (callers hold the lock)
@@ -620,9 +680,19 @@ class MutableAnnIndex:
             self._log = None
             self._compactions += 1
             engines = self._install(st)
+            lsn = None
+            if self._wal is not None:
+                # the marker records that the live corpus up to this LSN is
+                # now base layout — replay treats it as a no-op, checkpoint
+                # uses it to bound the log
+                lsn = self._wal.append_compact(
+                    generation=self.generation, n_live=st.n_live,
+                    next_id=self._next_id,
+                )
         # outside the lock: engine invalidation takes each engine's own
         # lock (see _install); swap_index below additionally records the
         # swap and re-binds an engine that was serving a DIFFERENT backend.
+        self._wal_commit(lsn)
         self._notify_engines(engines)
         if engine is not None:
             engine.swap_index(self.searcher(), cfg=self.cfg)
@@ -632,16 +702,40 @@ class MutableAnnIndex:
     def save(self, path: str) -> str:
         """Persist base + delta + tombstones in ONE atomic manifest commit
         (:func:`repro.ann.persistence.save_mutable_index`) — a restart
-        mid-churn resumes without replaying mutations."""
+        mid-churn resumes without replaying mutations. With a WAL
+        attached the manifest records the (segment, LSN) watermark and the
+        log checkpoints (rotate + retire covered segments) afterwards."""
         from repro.ann.persistence import save_mutable_index
 
         return save_mutable_index(self, path)
 
+    def checkpoint(self, path: str | None = None) -> str:
+        """Snapshot to ``path`` (default: the last save/load directory)
+        and bound the WAL there; compaction calls this when a checkpoint
+        directory is known so the log never outgrows one churn epoch."""
+        path = self._checkpoint_path if path is None else path
+        if path is None:
+            raise ValueError(
+                "no checkpoint path: pass one or save()/load() first"
+            )
+        return self.save(path)
+
     @classmethod
-    def load(cls, path: str, *, policy=None) -> "MutableAnnIndex":
+    def load(cls, path: str, *, policy=None, wal_dir=None,
+             durability=None) -> "MutableAnnIndex":
+        """Load a snapshot; with ``wal_dir`` also replay records past the
+        snapshot's watermark (crash recovery) and keep logging there."""
         from repro.ann.persistence import load_mutable_index
 
-        return load_mutable_index(path, policy=policy)
+        return load_mutable_index(
+            path, policy=policy, wal_dir=wal_dir, durability=durability
+        )
+
+    def close(self) -> None:
+        """Flush and close the WAL (if any); the index stays queryable
+        but further mutations in a durable mode will fail."""
+        if self._wal is not None:
+            self._wal.close()
 
     # --------------------------------------------------------------- info --
     @property
@@ -657,7 +751,7 @@ class MutableAnnIndex:
 
     def stats(self) -> dict:
         st = self._state
-        return {
+        out = {
             "n_base": st.n_base,
             "n_tombstones": st.n_tombstones,
             "n_delta_live": st.n_delta_live,
@@ -669,7 +763,11 @@ class MutableAnnIndex:
             "last_compaction_s": self._last_compaction_s,
             "next_id": self._next_id,
             "dirty": self.dirty,
+            "durability": self.durability,
         }
+        if self._wal is not None:
+            out["wal"] = self._wal.stats()
+        return out
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         s = self.stats()

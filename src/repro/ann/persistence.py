@@ -204,10 +204,17 @@ def save_mutable_index(mutable, path: str) -> str:
             "compactions": int(mutable._compactions),
             "n_delta_rows": int(st.n_delta_rows),
             "n_base": int(st.n_base),
+            "durability": mutable.durability,
             "base": None
             if st.base is None
             else _index_struct(st.base.sc_index),
         }
+        if mutable._wal is not None:
+            # the watermark is read under the same lock the state snapshot
+            # is taken under, so it names exactly the mutation history this
+            # snapshot reflects; it commits atomically with the arrays
+            seg, lsn = mutable._wal.position()
+            meta["wal"] = {"segment": int(seg), "lsn": int(lsn)}
         tree = {
             "base_ids": st.base_ids,
             "tombstones": st.tombstones,
@@ -223,15 +230,32 @@ def save_mutable_index(mutable, path: str) -> str:
     with open(tmp, "w") as f:  # human-readable mirror, never load-bearing
         json.dump(meta, f, indent=1)
     os.replace(tmp, _meta_path(path))
+    mutable._checkpoint_path = path
+    if mutable._wal is not None:
+        # the snapshot is durable: rotate the active segment and retire
+        # everything it covers, so the log stays bounded
+        mutable._wal.checkpoint(meta["wal"]["lsn"])
     return path
 
 
-def load_mutable_index(path: str, *, policy=None):
+def load_mutable_index(path: str, *, policy=None, wal_dir=None,
+                       durability=None):
     """Load a :func:`save_mutable_index` directory back into a
     :class:`~repro.ann.mutable.MutableAnnIndex` — bitwise state, including
-    an uncompacted delta and live tombstones."""
+    an uncompacted delta and live tombstones.
+
+    Crash recovery: with ``wal_dir``, the WAL there is opened (its torn
+    tail, if any, truncated at the last good record), every record past
+    the snapshot's (segment, LSN) watermark is replayed onto the loaded
+    state in LSN order, and the returned index keeps logging to the same
+    directory (``durability`` defaults to what the snapshot recorded,
+    else ``"async"``). Replay applies whole records only — a partial
+    append never survives the CRC check — so the result is exactly the
+    pre-crash state up to the last durable record."""
     from repro.ann.index import AnnIndex
-    from repro.ann.mutable import MutableAnnIndex, _State
+    from repro.ann.mutable import MutableAnnIndex, _State, _state_delete, \
+        _state_insert
+    from repro.ann.wal import KIND_DELETE, KIND_INSERT, WriteAheadLog
 
     meta = _read_format_meta(path, MUTABLE_FORMAT, MUTABLE_FORMAT_VERSION)
     cfg = _config_of(meta, path)
@@ -255,8 +279,20 @@ def load_mutable_index(path: str, *, policy=None):
     base = None
     if meta["base"] is not None:
         base = AnnIndex(sc_index=tree["base"], cfg=cfg)
-    mutable = MutableAnnIndex(cfg=cfg, dim=d, policy=policy)
-    mutable._state = _State(
+    wal = None
+    if wal_dir is not None:
+        if durability is None:
+            durability = meta.get("durability") or "async"
+            if durability == "none":
+                durability = "async"
+        wal = WriteAheadLog(wal_dir)  # scans + truncates any torn tail
+    elif durability not in (None, "none"):
+        raise ValueError(f"durability={durability!r} requires wal_dir")
+    mutable = MutableAnnIndex(
+        cfg=cfg, dim=d, policy=policy, wal=wal,
+        durability=durability if wal is not None else "none",
+    )
+    st = _State(
         base=base,
         base_ids=np.asarray(tree["base_ids"]),
         tombstones=np.asarray(tree["tombstones"]),
@@ -267,4 +303,32 @@ def load_mutable_index(path: str, *, policy=None):
     mutable._next_id = int(meta["next_id"])
     mutable.generation = int(meta["generation"])
     mutable._compactions = int(meta["compactions"])
+    if wal is not None:
+        watermark = int(meta.get("wal", {}).get("lsn", -1))
+        replayed = 0
+        expected = watermark + 1
+        for rec in wal.take_recovered():
+            if rec.lsn <= watermark:
+                continue
+            if rec.lsn != expected:
+                # hole between the snapshot watermark and the log (e.g. a
+                # lost leading write): records past it are untrusted — the
+                # snapshot state alone is the consistent recovery point
+                break
+            expected += 1
+            if rec.kind == KIND_INSERT:
+                st = _state_insert(st, rec.vectors, rec.ids)
+                mutable._next_id = max(
+                    mutable._next_id, int(rec.ids.max()) + 1
+                )
+            elif rec.kind == KIND_DELETE:
+                st = _state_delete(st, rec.ids)
+            # compact markers are layout events, not corpus events: the
+            # replayed state carries the same live corpus either way
+            mutable.generation = max(mutable.generation, int(rec.generation))
+            replayed += 1
+        wal.records_replayed = replayed
+        mutable._mutations = replayed
+    mutable._state = st
+    mutable._checkpoint_path = path
     return mutable

@@ -77,10 +77,18 @@ class Searcher:
         *,
         max_cached_fns: int = 64,
         buckets=ANN_BATCH_BUCKETS,
+        autotune_cache: str | None = None,
     ):
         self.index = index
         self.cfg = cfg
         self.max_cached_fns = int(max_cached_fns)
+        # Warm the kernel autotune cache once so the first compile picks up
+        # pre-tuned (bq, bn) winners instead of searching or defaulting.
+        self.autotune_entries_loaded = 0
+        if autotune_cache is not None:
+            from repro.kernels.autotune import load_cache as _load_autotune
+
+            self.autotune_entries_loaded = _load_autotune(autotune_cache)
         self.buckets = tuple(buckets)
         self._fns: OrderedDict = OrderedDict()  # (bucket, k, cfg) -> callable
         self.compile_counts: dict = {}  # same key -> #times compiled
@@ -226,8 +234,10 @@ class ShardedSearcher(Searcher):
         query_axes=(),
         max_cached_fns: int = 64,
         buckets=ANN_BATCH_BUCKETS,
+        autotune_cache: str | None = None,
     ):
-        super().__init__(index, cfg, max_cached_fns=max_cached_fns, buckets=buckets)
+        super().__init__(index, cfg, max_cached_fns=max_cached_fns,
+                         buckets=buckets, autotune_cache=autotune_cache)
         from jax.sharding import NamedSharding
 
         from repro.compat import make_mesh
@@ -312,6 +322,7 @@ def make_searcher(
     data_axes=None,
     query_axes=(),
     max_cached_fns: int = 64,
+    autotune_cache: str | None = None,
 ) -> Searcher:
     """Placement-resolving :class:`Searcher` factory.
 
@@ -338,7 +349,10 @@ def make_searcher(
                 f"mesh/shards are only consumed by placement='sharded', got "
                 f"placement='single' with mesh={mesh!r} shards={shards!r}"
             )
-        return SingleDeviceSearcher(index, cfg, max_cached_fns=max_cached_fns)
+        return SingleDeviceSearcher(
+            index, cfg, max_cached_fns=max_cached_fns,
+            autotune_cache=autotune_cache,
+        )
     if placement == "sharded":
         return ShardedSearcher(
             index,
@@ -348,6 +362,7 @@ def make_searcher(
             data_axes=data_axes,
             query_axes=query_axes,
             max_cached_fns=max_cached_fns,
+            autotune_cache=autotune_cache,
         )
     raise ValueError(
         f"unknown placement {placement!r} (want 'single', 'sharded' or 'auto')"

@@ -23,6 +23,18 @@ dev box the devices are forced via
 before jax initializes, so all jax-importing modules are imported inside
 ``main()`` after argument parsing.
 
+Durability: ``--wal-dir DIR`` makes churn serving crash-safe — every
+insert/delete batch is appended to a write-ahead log there *before* it is
+applied (``--durability sync`` fsyncs on the caller's path, ``async``
+group-commits on the shared worker pool). ``--save-index DIR`` with
+``--churn`` persists the MUTABLE snapshot (base + delta + tombstones +
+WAL watermark); a later ``--load-index DIR --wal-dir WAL`` replays the
+log past the watermark, so a ``kill -9`` mid-churn loses nothing that
+was acknowledged. ``--verify-recovery`` then proves it: the recovered
+index is compacted and checked bitwise against a from-scratch build
+over the recovered live corpus. ``--autotune-cache PATH`` warm-loads
+kernel block-size winners at engine construction.
+
 Async pipeline: ``--async`` starts the engine's background drain worker
 and drives it with ``--producers`` concurrent submitter threads — each
 ``submit()`` returns an AnnFuture, batches form continuously off the
@@ -104,6 +116,23 @@ def main(argv=None):
                     help="what to do past --max-queue-depth: shed with "
                          "AdmissionError, serve cache hits only, or degrade "
                          "to a lower-beta fast path")
+    ap.add_argument("--wal-dir", default=None, metavar="DIR",
+                    help="write-ahead log directory: churn mutations are "
+                         "logged there before they apply; with --load-index "
+                         "the log is replayed past the snapshot watermark")
+    ap.add_argument("--durability", choices=["none", "async", "sync"],
+                    default=None,
+                    help="WAL commit mode: sync fsyncs on the caller's "
+                         "path, async group-commits on the worker pool "
+                         "(default: sync when --wal-dir is given)")
+    ap.add_argument("--autotune-cache", default=None, metavar="PATH",
+                    help="warm-load kernel autotune winners (a "
+                         "kernels.autotune save_cache JSON) at engine "
+                         "construction")
+    ap.add_argument("--verify-recovery", action="store_true",
+                    help="after --load-index --wal-dir: compact the "
+                         "recovered index and assert bitwise parity with a "
+                         "from-scratch build over the recovered corpus")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.pressure < 1:
@@ -118,6 +147,16 @@ def main(argv=None):
     if args.load_index and args.save_index:
         ap.error("--save-index with --load-index would rewrite the same "
                  "index; pick one")
+    durability = args.durability
+    if args.wal_dir and durability in (None, "none"):
+        durability = "sync" if durability is None else ap.error(
+            "--durability none contradicts --wal-dir")
+    if durability in ("async", "sync") and not args.wal_dir:
+        ap.error(f"--durability {durability} requires --wal-dir")
+    if args.wal_dir and not (args.churn or args.load_index):
+        ap.error("--wal-dir needs a mutable index: --churn or --load-index")
+    if args.verify_recovery and not (args.load_index and args.wal_dir):
+        ap.error("--verify-recovery needs --load-index and --wal-dir")
     if args.shards > 1:
         # CPU dev: force host devices BEFORE any jax import/initialization
         # (hostdev is the one launch module that never imports jax).
@@ -133,19 +172,52 @@ def main(argv=None):
     from repro.serving import AnnRequest
 
     held = max(args.requests, 1)
+    mutable = None
+    index = None
     if args.load_index:
-        index = AnnIndex.load(args.load_index)
-        # only an EXPLICIT --rerank overrides the saved config
-        if args.rerank is not None and args.rerank != index.cfg.rerank:
-            index = index.replace_cfg(rerank=args.rerank)
-        print(f"loaded index from {args.load_index}: n={index.n} d={index.d} "
-              f"({index.index_bytes / 1e6:.1f} MB, rerank={index.cfg.rerank})",
-              flush=True)
-        # fresh query stream in the loaded index's space; an un-passed --k
-        # defers to the saved config, like the rest of the loaded cfg
-        held_out = gmm_dataset(held, index.d, seed=args.seed + 1)
-        if args.k is None:
-            args.k = index.cfg.k
+        from repro.ann.persistence import INDEX_STEP, MUTABLE_FORMAT
+        from repro.checkpoint import read_manifest
+
+        fmt = (read_manifest(args.load_index, INDEX_STEP).get("extra")
+               or {}).get("format")
+        if fmt == MUTABLE_FORMAT:
+            from repro.ann import CompactionPolicy, MutableAnnIndex
+
+            policy = (CompactionPolicy(max_delta_rows=max(8, 4 * args.churn))
+                      if args.churn else None)
+            mutable = MutableAnnIndex.load(
+                args.load_index, policy=policy, wal_dir=args.wal_dir,
+                durability=durability,
+            )
+            replayed = (0 if mutable._wal is None
+                        else mutable._wal.records_replayed)
+            cfg = mutable.cfg
+            print(f"loaded mutable index from {args.load_index}: "
+                  f"n_live={mutable.n_live} d={mutable.d} "
+                  f"(replayed {replayed} WAL records, "
+                  f"durability={mutable.durability})", flush=True)
+            held_out = gmm_dataset(held, mutable.d, seed=args.seed + 1)
+            if args.k is None:
+                args.k = cfg.k
+            if args.verify_recovery:
+                _verify_recovery(mutable, args.seed)
+        else:
+            if args.wal_dir:
+                ap.error(f"{args.load_index} is an immutable snapshot; "
+                         "--wal-dir replay needs a mutable save "
+                         "(serve_ann --churn --wal-dir --save-index)")
+            index = AnnIndex.load(args.load_index)
+            # only an EXPLICIT --rerank overrides the saved config
+            if args.rerank is not None and args.rerank != index.cfg.rerank:
+                index = index.replace_cfg(rerank=args.rerank)
+            print(f"loaded index from {args.load_index}: n={index.n} "
+                  f"d={index.d} ({index.index_bytes / 1e6:.1f} MB, "
+                  f"rerank={index.cfg.rerank})", flush=True)
+            # fresh query stream in the loaded index's space; an un-passed
+            # --k defers to the saved config, like the rest of the loaded cfg
+            held_out = gmm_dataset(held, index.d, seed=args.seed + 1)
+            if args.k is None:
+                args.k = index.cfg.k
     else:
         if args.k is None:
             args.k = 10
@@ -156,7 +228,8 @@ def main(argv=None):
                           rerank=args.rerank or "gather")
         print(f"building TaCo index: n={data.shape[0]} d={args.d} ...", flush=True)
         index = AnnIndex.build(data, cfg)
-        if args.save_index:
+        if args.save_index and not args.churn:
+            # with --churn the MUTABLE snapshot below supersedes this save
             index.save(args.save_index)
             print(f"saved index to {args.save_index} "
                   f"({index.index_bytes / 1e6:.1f} MB index "
@@ -169,6 +242,7 @@ def main(argv=None):
         # overlap is dropped below, so hits can only come from in-stream
         # repeats — which is what the knob is meant to demonstrate)
         pool = held_out[: max(1, (held + 1) // 2)]
+    base_cfg = mutable.cfg if mutable is not None else index.cfg
     reqs = []
     for i in range(args.requests):
         k = args.k
@@ -176,7 +250,7 @@ def main(argv=None):
         if args.mixed and i % 3 == 1:
             k = max(1, args.k // 2)
         if args.mixed and i % 3 == 2:
-            beta = index.cfg.beta * 2
+            beta = base_cfg.beta * 2
         reqs.append(AnnRequest(query=pool[i % pool.shape[0]], k=k, beta=beta))
 
     serving_kwargs = dict(
@@ -187,15 +261,24 @@ def main(argv=None):
         default_deadline_s=args.deadline_ms / 1e3 if args.deadline_ms else None,
         max_queue_depth=args.max_queue_depth,
         admission_policy=args.admission,
+        autotune_cache=args.autotune_cache,
     )
-    mutable = None
-    if args.churn:
+    if mutable is None and args.churn:
         from repro.ann import CompactionPolicy
 
         # compaction roughly every 4 churn waves; the swap is the point
         mutable = index.mutable(
-            policy=CompactionPolicy(max_delta_rows=max(8, 4 * args.churn))
+            policy=CompactionPolicy(max_delta_rows=max(8, 4 * args.churn)),
+            durability=durability or "none",
+            wal_dir=args.wal_dir,
         )
+        if args.save_index:
+            # a MUTABLE snapshot: base + delta + tombstones + the WAL
+            # watermark, so a restart replays only what came after it
+            mutable.save(args.save_index)
+            print(f"saved mutable snapshot to {args.save_index} "
+                  f"(durability={mutable.durability})", flush=True)
+    if mutable is not None:
         engine = mutable.engine(**serving_kwargs)
     else:
         placement = "sharded" if args.shards > 1 else "single"
@@ -212,6 +295,57 @@ def main(argv=None):
     inserted: list[int] = []
     results = []
     shed = 0
+    try:
+        return _serve(args, engine, mutable, reqs, results, inserted,
+                      churn_rng, shed)
+    finally:
+        # abnormal exits must not strand the WAL with unflushed appends
+        # (or leave the engine's drain worker running)
+        if mutable is not None:
+            mutable.close()
+
+
+def _verify_recovery(mutable, seed):
+    """``--verify-recovery``: prove the replayed state is coherent against
+    a from-scratch ``AnnIndex.build`` over the recovered live corpus.
+
+    Pre-compaction the recovered base+delta and the oracle run different
+    clusterings, so approximate selection can only be held to a recall
+    floor; ``compact()`` then installs exactly the oracle build, after
+    which results must match the oracle bitwise."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed + 13)
+    queries = rng.standard_normal((8, mutable.d)).astype(np.float32)
+    oracle, id_map = mutable.rebuild_oracle()
+    want_i, want_d = oracle.search(queries)
+    want_i, want_d = np.asarray(want_i), np.asarray(want_d)
+    want_ext = np.where(want_i >= 0, id_map[np.maximum(want_i, 0)], -1)
+
+    got_i, _ = mutable.search(queries)
+    got_i = np.asarray(got_i)
+    overlap = float(np.mean([
+        len(set(g[g >= 0]) & set(w[w >= 0])) / max(1, int(np.sum(w >= 0)))
+        for g, w in zip(got_i, want_ext)
+    ]))
+    mutable.compact(reason="verify-recovery")
+    post_i, post_d = mutable.search(queries)
+    bitwise = (np.array_equal(np.asarray(post_i), want_ext)
+               and np.array_equal(np.asarray(post_d), want_d))
+    print(f"verify-recovery: pre-compaction overlap vs oracle {overlap:.2f}, "
+          f"post-compaction bitwise {'MATCH' if bitwise else 'MISMATCH'}",
+          flush=True)
+    if not bitwise or overlap < 0.1:
+        # the overlap floor is a sanity check (replayed state is not
+        # garbage), not a recall target: the two sides run different
+        # clusterings, so approximate selection legitimately diverges
+        raise SystemExit("verify-recovery FAILED: recovered index does not "
+                         "match the from-scratch oracle")
+
+
+def _serve(args, engine, mutable, reqs, results, inserted, churn_rng, shed):
+    import numpy as np
+
     if args.async_mode:
         # concurrent producers drive the background drain worker; churn
         # waves (and their pool-hosted compactions) run alongside them
@@ -237,7 +371,7 @@ def main(argv=None):
                    for i in range(n_p)]
         for th in threads:
             th.start()
-        if mutable is not None:
+        if mutable is not None and args.churn:
             from repro.ann.mutable import churn_wave
 
             for _ in range(max(1, len(reqs) // args.pressure)):
@@ -253,7 +387,7 @@ def main(argv=None):
         engine.close()
     else:
         for lo in range(0, len(reqs), args.pressure):
-            if mutable is not None:
+            if mutable is not None and args.churn:
                 # mixed workload: mutate between query waves, compact on
                 # policy
                 from repro.ann.mutable import churn_wave
@@ -300,6 +434,13 @@ def main(argv=None):
               f"(last {0 if ms['last_compaction_s'] is None else ms['last_compaction_s'] * 1e3:.0f} ms), "
               f"generation {t['index_generation']}, "
               f"{t['index_swaps']} engine swaps")
+    if "wal" in t:
+        w = t["wal"]
+        print(f"  wal: {w['appends']} appends   {w['fsyncs']} fsyncs   "
+              f"group mean {w['mean_group']:.1f} max {w['max_group']}   "
+              f"{w['bytes_appended']} bytes   "
+              f"segment {w['segment']} ({w['segments_retired']} retired)   "
+              f"replayed {w['records_replayed']}")
     if t["shards"] > 1:
         mean_c = ", ".join(f"{c:.0f}" for c in t["shard_candidates_mean"])
         print(f"  per-shard candidates/query [{mean_c}]   "

@@ -403,10 +403,19 @@ class AnnServingEngine:
         max_queue_depth: int = 0,  # 0 = unbounded (no admission control)
         admission_policy: str = "reject",
         degrade_beta_scale: float = 0.5,
+        autotune_cache: str | None = None,
     ):
         self.index = index
         self.cfg = cfg
         self.max_batch = int(max_batch)
+        # Kernel autotune warm-load: seed the process-wide (bq, bn) winner
+        # cache from a prior `autotune.save_cache` file so the first batch
+        # never pays a block-size search. Loaded once, at construction.
+        self.autotune_entries_loaded = 0
+        if autotune_cache is not None:
+            from repro.kernels.autotune import load_cache as _load_autotune
+
+            self.autotune_entries_loaded = _load_autotune(autotune_cache)
         self.buckets = tuple(b for b in buckets if b <= self.max_batch) or (
             self.max_batch,
         )
@@ -1129,6 +1138,14 @@ class AnnServingEngine:
                     else None
                 )
             out.update(self.backend.extra_telemetry())
+            # WAL telemetry hoist: a mutable backend reports durability
+            # stats nested under its own block; surface them top-level so
+            # operators see append/fsync/group-commit rates next to QPS.
+            mut = out.get("mutable")
+            if isinstance(mut, dict) and isinstance(mut.get("wal"), dict):
+                out["wal"] = mut["wal"]
+            if self.autotune_entries_loaded:
+                out["autotune_entries_loaded"] = self.autotune_entries_loaded
             if self.backend.shards > 1:
                 # per-shard candidate demand + truncation, and the size of the
                 # all-gather combine (id/dist pairs moved per query: shards*k).

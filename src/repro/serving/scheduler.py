@@ -115,12 +115,14 @@ class WorkerPool:
         self.name = name
         self.workers = _default_workers() if workers is None else max(1, int(workers))
         self._cond = threading.Condition(threading.Lock())
-        self._tasks: deque[tuple[WorkTask, object, tuple, dict]] = deque()
+        # (task, fn, args, kwargs, coalesce_key-or-None)
+        self._tasks: deque[tuple[WorkTask, object, tuple, dict, object]] = deque()
         self._threads: list[threading.Thread] = []
         self._services: list[threading.Thread] = []
         self._active = 0
         self._completed = 0
         self._failed = 0
+        self._coalesced: dict = {}  # coalesce key -> queued (not started) task
         self._shutdown = False
 
     # --------------------------------------------------------------- tasks --
@@ -131,7 +133,36 @@ class WorkerPool:
         with self._cond:
             if self._shutdown:
                 raise RuntimeError(f"WorkerPool {self.name!r} is shut down")
-            self._tasks.append((task, fn, args, kwargs))
+            self._tasks.append((task, fn, args, kwargs, None))
+            if len(self._threads) < self.workers:
+                t = threading.Thread(
+                    target=self._worker,
+                    name=f"{self.name}-worker-{len(self._threads)}",
+                    daemon=True,
+                )
+                self._threads.append(t)
+                t.start()
+            self._cond.notify()
+        return task
+
+    def submit_coalesced(self, fn, *args, key, label: str | None = None,
+                         **kwargs) -> WorkTask:
+        """Like :meth:`submit`, but at most one task per ``key`` sits in
+        the queue: while one is queued (not yet started), further submits
+        return it instead of enqueueing another. A task that has *started*
+        no longer coalesces — the next submit queues a fresh one, so a
+        caller that saw its work enqueued is always covered by a run that
+        begins afterwards. This is the group-commit shape: N appenders
+        kick the WAL flusher, one queued flush absorbs them all."""
+        with self._cond:
+            if self._shutdown:
+                raise RuntimeError(f"WorkerPool {self.name!r} is shut down")
+            queued = self._coalesced.get(key)
+            if queued is not None:
+                return queued
+            task = WorkTask(label)
+            self._coalesced[key] = task
+            self._tasks.append((task, fn, args, kwargs, key))
             if len(self._threads) < self.workers:
                 t = threading.Thread(
                     target=self._worker,
@@ -150,7 +181,9 @@ class WorkerPool:
                     self._cond.wait()
                 if self._shutdown and not self._tasks:
                     return
-                task, fn, args, kwargs = self._tasks.popleft()
+                task, fn, args, kwargs, key = self._tasks.popleft()
+                if key is not None and self._coalesced.get(key) is task:
+                    del self._coalesced[key]  # started: stop coalescing
                 self._active += 1
             try:
                 task._resolve(result=fn(*args, **kwargs))

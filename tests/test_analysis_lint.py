@@ -165,6 +165,49 @@ def test_b001_jax_dispatch_under_lock(tmp_path):
     assert codes(findings) == ["B001"]
 
 
+def test_b001_file_io_under_lock(tmp_path):
+    # fsync under a lock turns every appender into a disk wait — the exact
+    # failure mode the WAL's flush-baton design exists to avoid
+    src = """
+    import os
+    import threading
+
+    class C:
+        def __init__(self):
+            self._a = threading.Lock()
+            self._f = open("/dev/null", "ab")
+
+        def one(self, data):
+            with self._a:
+                self._f.write(data)
+                os.fsync(self._f.fileno())
+    """
+    findings = run(tmp_path, src)
+    assert codes(findings) == ["B001", "B001"]
+    assert any("file I/O" in f.message for f in findings)
+
+
+def test_b001_file_io_outside_lock_is_clean(tmp_path):
+    # the WAL flusher shape: swap state under the lock, write after release
+    src = """
+    import os
+    import threading
+
+    class C:
+        def __init__(self):
+            self._a = threading.Lock()
+            self._f = open("/dev/null", "ab")
+            self._pending = []
+
+        def one(self, data):
+            with self._a:
+                batch, self._pending = self._pending, []
+            self._f.write(b"".join(batch))
+            os.fsync(self._f.fileno())
+    """
+    assert run(tmp_path, src) == []
+
+
 # ------------------------------------------------------------------ W001 --
 def test_w001_wall_clock(tmp_path):
     src = """

@@ -70,6 +70,36 @@ def test_json_cache_roundtrip(tmp_path):
         (32, 512)
 
 
+def test_searcher_and_engine_warm_load_cache(tmp_path):
+    # construction-time warm load: get_blocks serves the persisted winner
+    # without any search having run in this process
+    import jax
+
+    from repro.ann import AnnIndex
+    from repro.core import taco_config
+
+    backend = jax.default_backend()
+    autotune.set_blocks("schist", (16, 1024), q=8, n=512, backend=backend)
+    path = str(tmp_path / "blocks.json")
+    autotune.save_cache(path)
+    autotune.clear_cache()
+    assert autotune.get_blocks("schist", q=8, n=512) == autotune.DEFAULT_BLOCKS
+
+    data = np.arange(64 * 16, dtype=np.float32).reshape(64, 16) % 7
+    cfg = taco_config(k=4, n_subspaces=2, subspace_dim=8, n_clusters=16,
+                      kmeans_iters=2)
+    index = AnnIndex.build(data, cfg)
+    s = index.searcher("single", autotune_cache=path)
+    assert s.autotune_entries_loaded == 1
+    assert autotune.get_blocks("schist", q=8, n=512) == (16, 1024)
+
+    autotune.clear_cache()
+    engine = index.engine(autotune_cache=path)
+    assert engine.autotune_entries_loaded == 1
+    assert autotune.get_blocks("schist", q=8, n=512) == (16, 1024)
+    assert engine.telemetry()["autotune_entries_loaded"] == 1
+
+
 def test_ops_consults_tuned_blocks():
     """The wrapper routes through the tuned (bq, bn) — results stay bitwise
     equal to the oracle under a non-default winner."""
