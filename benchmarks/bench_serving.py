@@ -29,6 +29,11 @@ caller's path) — so the cost of crash safety is a number, not a guess
 (the acceptance bar: async within 15% of none). ``--json PATH``
 persists the numbers (QPS, p50/p99, stage timings) for trend tracking —
 the committed baseline lives at BENCH_serving.json in the repo root.
+Two observability rows ride along: serving-stage percentiles pulled from
+the :mod:`repro.obs` metrics registry (the same histograms ``/metrics``
+exports — queue wait, batch exec, WAL flush/fsync, compaction) and an
+``engine-metrics-off`` row timed with the registry's global kill switch
+thrown, so the whole cost of instrumentation is a committed number.
 
   PYTHONPATH=src python benchmarks/bench_serving.py [--n 20000] [--d 64] \
       [--requests 32] [--pressure 16] [--shards 4] [--json BENCH_serving.json]
@@ -176,10 +181,23 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
     cfg_masked = dataclasses.replace(cfg, rerank="masked_full")
     engine, engine_s = run_engine("single", cfg)
     masked_engine, masked_s = run_engine("single", cfg_masked)
+
+    # --- metrics overhead: the same gather row with the registry's global
+    # kill switch thrown — the delta is the whole cost of instrumentation
+    # (the acceptance bar: metrics-on within 5% of metrics-off) ------------
+    from repro.obs import metrics as obsm
+
+    try:
+        obsm.set_enabled(False)
+        off_engine, metrics_off_s = run_engine("single", cfg)
+        off_engine.close()
+    finally:
+        obsm.set_enabled(True)
     rows = [
         ("adhoc-jit", adhoc_s),
         ("cached-jit", cached_s),
         ("engine-gather", engine_s),
+        ("engine-metrics-off", metrics_off_s),
         ("engine-masked", masked_s),
     ]
 
@@ -279,11 +297,32 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
                 churn_wal_t = mode_t
 
     stages = stage_timings(index, cfg, qs[:pressure])
+
+    # --- serving-stage percentiles from the process metrics registry: the
+    # same numbers /metrics exports, folded into the bench artifact so the
+    # trend file tracks queue-wait/exec/WAL/compaction distributions too --
+    obs_stages = {}
+    for fam in obsm.default_registry().families():
+        if fam.cls is not obsm.Histogram or not fam.name.startswith("taco_"):
+            continue
+        for lv, child in fam.children():
+            key = fam.name if not lv else f"{fam.name}[{','.join(lv)}]"
+            s = child.summary()
+            if s["count"]:
+                obs_stages[key] = {k2: s[k2] for k2 in
+                                   ("count", "p50", "p90", "p99")}
+
     t = engine.telemetry()
     mt = masked_engine.telemetry()
     print(f"requests={requests} pressure={pressure}")
     for name, secs in rows:
         print(f"  {name:14s}: {secs:7.3f}s  {requests / secs:8.0f} queries/s")
+    print(f"  metrics overhead: on {requests / engine_s:.0f} q/s vs "
+          f"off {requests / metrics_off_s:.0f} q/s "
+          f"({engine_s / metrics_off_s - 1:+.1%} wall)")
+    for key, s in sorted(obs_stages.items()):
+        print(f"  obs[{key}]: n={s['count']}  p50 {s['p50'] * 1e3:.3f} ms  "
+              f"p99 {s['p99'] * 1e3:.3f} ms")
     print(f"  gather p50 {t['latency_p50_s'] * 1e3:.2f} ms  p99 "
           f"{t['latency_p99_s'] * 1e3:.2f} ms  trunc {t['truncation_rate']:.3f}  "
           f"compiles {t['compiles_per_bucket']}")
@@ -338,6 +377,16 @@ def bench(n=20000, d=64, k=10, requests=32, pressure=16, shards=0, seed=0,
                             "latency_p99_s": mt["latency_p99_s"],
                             "truncation_rate": mt["truncation_rate"]},
             "stage_timings_us": stages,
+            # process-cumulative over every row of this bench run —
+            # including jit-compile warmup batches, which dominate the
+            # tail; read these for distribution shape, serve_ann
+            # --metrics-port for steady-state numbers
+            "obs_stage_percentiles_s": obs_stages,
+            "obs_overhead": {
+                "metrics_on_s": engine_s,
+                "metrics_off_s": metrics_off_s,
+                "on_vs_off_wall": engine_s / metrics_off_s,
+            },
             "masked_vs_gather_qps": engine_s / masked_s,
         }
         if sharded_t is not None:

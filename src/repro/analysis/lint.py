@@ -31,6 +31,13 @@ B001  blocking call in a lock-held region: JAX dispatch (any ``jax.``/
 W001  ``time.time()`` used for durations/deadlines: wall clock steps on
       NTP adjustment; use ``time.monotonic()`` (deadlines) or
       ``time.perf_counter()`` (elapsed measurement).
+O001  direct ``time.perf_counter()`` in a serving/ANN hot path
+      (any file under a ``serving`` or ``ann`` directory): stage timings
+      must flow through :func:`repro.obs.metrics.now` /
+      :func:`repro.obs.metrics.timed` so every measurement shares one
+      clock and lands in the metrics registry instead of forking a
+      private timing side-channel. ``repro.obs`` itself (the helpers'
+      home) and non-hot-path code are out of scope.
 T001  ``threading.Thread`` that is neither ``daemon=True`` nor provably
       ``join()``-ed in the surrounding scope: leaks at interpreter exit
       or silently swallows its errors.
@@ -66,6 +73,7 @@ RULES = {
     "L002": "non-reentrant lock re-acquired while already held",
     "B001": "blocking call / JAX dispatch / file I/O in a lock-held region",
     "W001": "time.time() used for durations or deadlines",
+    "O001": "time.perf_counter() in a serving/ann hot path (use repro.obs)",
     "T001": "thread neither daemon nor provably joined",
     "T002": "lock created outside __init__",
     "T003": "bare except",
@@ -807,6 +815,12 @@ def _enclosing_map(tree: ast.Module) -> dict[int, ast.AST]:
     return out
 
 
+def _in_hot_path(mod: ModuleInfo) -> bool:
+    """O001 scope: any file under a ``serving`` or ``ann`` directory
+    component (``repro.obs`` lives elsewhere, so the helpers are exempt)."""
+    return bool({"serving", "ann"} & set(mod.path.parts[:-1]))
+
+
 def _file_findings(mod: ModuleInfo, project: Project) -> list[Finding]:
     findings: list[Finding] = []
     tree = mod.tree
@@ -857,6 +871,22 @@ def _file_findings(mod: ModuleInfo, project: Project) -> list[Finding]:
                 "time.time() is wall-clock (steps under NTP): use "
                 "time.monotonic() for deadlines, time.perf_counter() for "
                 "elapsed measurement",
+            ))
+            continue
+        # O001: serving/ann hot paths must time through the obs helpers,
+        # not a private perf_counter side-channel
+        is_perf_counter = chain == ["time", "perf_counter"] or (
+            chain == ["perf_counter"]
+            and mod.imports.get("perf_counter", ("",))[0] == "symbol"
+            and mod.imports["perf_counter"][1] == "time"
+        )
+        if is_perf_counter and _in_hot_path(mod):
+            findings.append(Finding(
+                mod.shown, node.lineno, node.col_offset, "O001",
+                "direct time.perf_counter() in a serving/ann hot path: "
+                "use repro.obs.metrics.now() (or timed()) so stage "
+                "timings share one clock and land in the metrics "
+                "registry",
             ))
             continue
         # T001: threads must be daemon or joined

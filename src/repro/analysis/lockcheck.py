@@ -304,6 +304,10 @@ _TARGET_MODULES = (
     "repro.ann.mutable",
     "repro.ann.wal",
     "repro.checkpoint.checkpoint",
+    # obs locks are leaves (no callouts while held) — instrumenting them
+    # proves the metrics registry can never join a lock-order cycle
+    "repro.obs.metrics",
+    "repro.obs.export",
 )
 
 _installed = False

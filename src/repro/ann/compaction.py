@@ -22,9 +22,18 @@ also how "compact to empty" behaves.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 from repro.ann.index import AnnIndex
+from repro.obs import metrics as obsm
+from repro.obs import trace as obst
+
+# Process-wide compaction metric families (repro.obs registry).
+_M_COMPACTIONS = obsm.counter(
+    "taco_compaction_total", "Compactions installed (manual + background)"
+)
+_M_COMPACTION_SECONDS = obsm.histogram(
+    "taco_compaction_seconds", "Compaction wall time (rebuild + install)"
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,7 +103,7 @@ def compact(mutable, *, engine=None, reason: str = "manual") -> CompactionReport
     one generation bump, result cache dropped, stale results never served.
     Raises RuntimeError if another compaction is already in progress.
     """
-    t0 = time.perf_counter()
+    t0 = obsm.now()
     snap, vecs, ids = mutable._begin_compaction()
     return _run_to_install(mutable, snap, vecs, ids, engine=engine,
                            reason=reason, t0=t0)
@@ -102,24 +111,33 @@ def compact(mutable, *, engine=None, reason: str = "manual") -> CompactionReport
 
 def _run_to_install(mutable, snap, vecs, ids, *, engine, reason, t0) -> CompactionReport:
     """Build + install + report (the log was already started)."""
+    span = obst.default_tracer().start_trace(
+        "compaction", reason=reason, n_live=int(vecs.shape[0])
+    )
     try:
         base = None
         if vecs.shape[0] >= mutable.cfg.sqrt_k:
-            base = AnnIndex.build(vecs, mutable.cfg)
+            with span.child("rebuild"):
+                base = AnnIndex.build(vecs, mutable.cfg)
     except BaseException:
         mutable._abort_compaction()
+        span.finish(error=True)
         raise
-    reclaimed, replayed = mutable._finish_compaction(
-        base, vecs, ids, engine=engine, snapshot=snap
-    )
+    with span.child("install"):
+        reclaimed, replayed = mutable._finish_compaction(
+            base, vecs, ids, engine=engine, snapshot=snap
+        )
     if mutable._wal is not None and mutable._checkpoint_path is not None:
         # the install marker is in the log; persisting the post-install
         # snapshot moves the watermark past it, so checkpoint() rotates
         # the active segment and retires everything the snapshot covers —
         # the log stays bounded to one churn epoch
         mutable.checkpoint()
-    duration = time.perf_counter() - t0
+    duration = obsm.now() - t0
     mutable._last_compaction_s = duration
+    _M_COMPACTIONS.inc()
+    _M_COMPACTION_SECONDS.observe(duration)
+    span.finish(duration_s=duration, replayed=replayed)
     return CompactionReport(
         reason=reason,
         duration_s=duration,
@@ -178,7 +196,7 @@ def compact_async(mutable, *, engine=None, reason: str = "background",
     from repro.serving.scheduler import get_shared_pool
 
     handle = CompactionHandle()
-    t0 = time.perf_counter()
+    t0 = obsm.now()
     snap, vecs, ids = mutable._begin_compaction()  # sync: log starts NOW
 
     def work():

@@ -68,6 +68,19 @@ from repro.ann.searcher import AnnBatchResult, Searcher
 from repro.batching import ANN_BATCH_BUCKETS
 from repro.core.config import SCConfig
 from repro.core.taco import rerank as _exact_rerank
+from repro.obs import metrics as obsm
+from repro.obs import trace as obst
+
+# Process-wide mutation metric families (repro.obs registry).
+_M_MUTATIONS = obsm.counter(
+    "taco_mutable_rows_total", "Rows mutated on any mutable index, by kind",
+    labelnames=("kind",),
+)
+_M_ROWS_INSERTED = _M_MUTATIONS.labels(kind="insert")
+_M_ROWS_DELETED = _M_MUTATIONS.labels(kind="delete")
+_M_LIVE_ROWS = obsm.gauge(
+    "taco_mutable_live_rows", "Live rows (base - tombstones + delta live)"
+)
 
 
 def _pow2ceil(x: int) -> int:
@@ -471,6 +484,7 @@ class MutableAnnIndex:
             v = v[None]
         if v.ndim != 2 or v.shape[1] != self.d:
             raise ValueError(f"vectors shape {v.shape} != (m, {self.d})")
+        span = obst.default_tracer().start_trace("insert", rows=int(v.shape[0]))
         with self._lock:
             ids = np.arange(self._next_id, self._next_id + v.shape[0],
                             dtype=np.int32)
@@ -479,14 +493,18 @@ class MutableAnnIndex:
             if self._wal is not None:
                 # append BEFORE apply (memory only under the lock) so the
                 # log order is exactly the apply order
-                lsn = self._wal.append_insert(
-                    ids, v, generation=self.generation + 1
-                )
+                with span.child("wal-append"):
+                    lsn = self._wal.append_insert(
+                        ids, v, generation=self.generation + 1
+                    )
             if self._log is not None:
                 self._log.append(("insert", v, ids))
             engines = self._install(_state_insert(self._state, v, ids))
-        self._wal_commit(lsn)
+        _M_ROWS_INSERTED.inc(v.shape[0])
+        with span.child("wal-commit", durability=self.durability):
+            self._wal_commit(lsn)
         self._notify_engines(engines)
+        span.finish()
         return ids
 
     def delete(self, ids) -> int:
@@ -494,18 +512,23 @@ class MutableAnnIndex:
         Raises KeyError (mutating nothing) if any id is unknown or already
         deleted."""
         arr = np.atleast_1d(np.asarray(ids, np.int64))
+        span = obst.default_tracer().start_trace("delete", rows=int(arr.size))
         with self._lock:
             new = _state_delete(self._state, arr)  # raises before any change
             lsn = None
             if self._wal is not None:
-                lsn = self._wal.append_delete(
-                    arr, generation=self.generation + 1
-                )
+                with span.child("wal-append"):
+                    lsn = self._wal.append_delete(
+                        arr, generation=self.generation + 1
+                    )
             if self._log is not None:
                 self._log.append(("delete", arr.copy()))
             engines = self._install(new)
-        self._wal_commit(lsn)
+        _M_ROWS_DELETED.inc(arr.size)
+        with span.child("wal-commit", durability=self.durability):
+            self._wal_commit(lsn)
         self._notify_engines(engines)
+        span.finish()
         return int(arr.size)
 
     def _wal_commit(self, lsn) -> None:
@@ -537,6 +560,7 @@ class MutableAnnIndex:
         self._state = st
         self.generation += 1
         self._mutations += 1
+        _M_LIVE_ROWS.set(st.n_live)
         alive, engines = [], []
         for ref in self._engines:
             eng = ref()

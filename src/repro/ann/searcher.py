@@ -35,6 +35,22 @@ import numpy as np
 from repro.core.config import SCConfig
 from repro.core.taco import SCIndex, query_with_stats
 from repro.batching import ANN_BATCH_BUCKETS, bucket_size, pad_rows
+from repro.obs import metrics as obsm
+
+# Process-wide searcher metric families (repro.obs registry): executable
+# LRU behaviour and autotune warm-loads, across every searcher instance.
+_M_COMPILES = obsm.counter(
+    "taco_searcher_compiles_total",
+    "Query executables compiled (one per new (bucket, k, cfg) key)",
+)
+_M_FN_HITS = obsm.counter(
+    "taco_searcher_fn_cache_hits_total",
+    "Executable-cache hits (batch reused a compiled query fn)",
+)
+_M_AUTOTUNE = obsm.gauge(
+    "taco_searcher_autotune_entries_loaded",
+    "Autotune (bq, bn) winners warm-loaded at searcher construction",
+)
 
 
 @dataclasses.dataclass
@@ -89,6 +105,7 @@ class Searcher:
             from repro.kernels.autotune import load_cache as _load_autotune
 
             self.autotune_entries_loaded = _load_autotune(autotune_cache)
+            _M_AUTOTUNE.set(self.autotune_entries_loaded)
         self.buckets = tuple(buckets)
         self._fns: OrderedDict = OrderedDict()  # (bucket, k, cfg) -> callable
         self.compile_counts: dict = {}  # same key -> #times compiled
@@ -100,10 +117,12 @@ class Searcher:
         if key not in self._fns:
             self._fns[key] = self._compile(bucket, k, cfg)
             self.compile_counts[key] = self.compile_counts.get(key, 0) + 1
+            _M_COMPILES.inc()
             while len(self._fns) > self.max_cached_fns:
                 self._fns.popitem(last=False)
         else:
             self._fns.move_to_end(key)
+            _M_FN_HITS.inc()
         return self._fns[key]
 
     def _compile(self, bucket: int, k: int, cfg: SCConfig):

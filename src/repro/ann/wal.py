@@ -67,6 +67,31 @@ import zlib
 
 import numpy as np
 
+from repro.obs import metrics as obsm
+from repro.obs import trace as obst
+
+# Process-wide durability metric families (repro.obs registry). Updated
+# at the same sites as the per-log counters below; the registry is the
+# cross-log aggregate ``/metrics`` exports.
+_M_APPENDS = obsm.counter(
+    "taco_wal_appends_total", "Records appended to any write-ahead log"
+)
+_M_APPEND_BYTES = obsm.counter(
+    "taco_wal_append_bytes_total", "Framed bytes written to WAL segments"
+)
+_M_FSYNCS = obsm.counter(
+    "taco_wal_fsyncs_total", "fsync() calls on WAL segment files"
+)
+_M_FSYNC_SECONDS = obsm.histogram(
+    "taco_wal_fsync_seconds", "WAL fsync() wall time"
+)
+_M_FLUSH_SECONDS = obsm.histogram(
+    "taco_wal_flush_seconds", "One WAL group commit (write + fsync + rotate)"
+)
+_M_GROUP_RECORDS = obsm.histogram(
+    "taco_wal_group_commit_records", "Records absorbed per WAL group commit"
+)
+
 SEGMENT_MAGIC = b"TACOWAL\x01"
 SEGMENT_PREFIX = "wal_"
 SEGMENT_SUFFIX = ".log"
@@ -459,6 +484,7 @@ class WriteAheadLog:
             self._pending.append((lsn, frame(payload)))
             self._last_enqueued = lsn
             self.appends += 1
+            _M_APPENDS.inc()
         return lsn
 
     def append_insert(self, ids, vectors, *, generation: int) -> int:
@@ -511,15 +537,24 @@ class WriteAheadLog:
         data = b"".join(b for _, b in batch)
         new_file = None
         err = None
+        t0 = obsm.now()
+        span = obst.default_tracer().start_trace(
+            "wal-flush", records=len(batch), bytes=len(data)
+        ) if batch else obst.NULL_SPAN
         try:
             if data:
                 f.write(data)
                 if self.fsync_enabled:
-                    os.fsync(f.fileno())
+                    with span.child("fsync"), obsm.timed(_M_FSYNC_SECONDS):
+                        os.fsync(f.fileno())
             if seg_written + len(data) >= self.segment_bytes:
                 new_file = self._new_segment_file(self._segment + 1)
         except BaseException as e:  # noqa: BLE001 - recorded, re-raised below
             err = e
+        span.finish(error=err is not None)
+        if batch:
+            _M_FLUSH_SECONDS.observe(obsm.now() - t0)
+            _M_GROUP_RECORDS.observe(len(batch))
         old_file = None
         with self._mu:
             if err is not None:
@@ -530,8 +565,10 @@ class WriteAheadLog:
                     self._segment_last[self._segment] = batch[-1][0]
                 self._segment_written = seg_written + len(data)
                 self.bytes_appended += len(data)
+                _M_APPEND_BYTES.inc(len(data))
                 if self.fsync_enabled and data:
                     self.fsyncs += 1
+                    _M_FSYNCS.inc()
                 if batch:
                     self.group_commits += 1
                     self.group_records += len(batch)

@@ -133,6 +133,21 @@ def main(argv=None):
                     help="after --load-index --wal-dir: compact the "
                          "recovered index and assert bitwise parity with a "
                          "from-scratch build over the recovered corpus")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="N",
+                    help="serve the live observability surface on this port "
+                         "(0 = ephemeral): /metrics Prometheus text, "
+                         "/telemetry JSON, /trace Chrome trace JSON")
+    ap.add_argument("--trace-sample", type=float, default=0.0, metavar="R",
+                    help="probability that a request/mutation starts a "
+                         "trace (0 = tracing off, 1 = trace everything)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="dump the trace ring buffer as Chrome trace JSON "
+                         "to PATH on exit (load in Perfetto / "
+                         "chrome://tracing); implies --trace-sample 1.0 "
+                         "unless one is given")
+    ap.add_argument("--stats-every", type=int, default=0, metavar="N",
+                    help="print a one-line engine stats summary every N "
+                         "serving waves (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.pressure < 1:
@@ -157,6 +172,17 @@ def main(argv=None):
         ap.error("--wal-dir needs a mutable index: --churn or --load-index")
     if args.verify_recovery and not (args.load_index and args.wal_dir):
         ap.error("--verify-recovery needs --load-index and --wal-dir")
+    if not 0.0 <= args.trace_sample <= 1.0:
+        ap.error("--trace-sample must be in [0, 1]")
+    if args.trace_out and args.trace_sample == 0.0:
+        args.trace_sample = 1.0
+    if args.trace_sample > 0.0:
+        # install before any engine/pool exists so every span lands in one
+        # ring (repro.obs never imports jax, so this is safe pre-shards)
+        from repro.obs import trace as obst
+
+        obst.set_default_tracer(obst.Tracer(sample_rate=args.trace_sample,
+                                            seed=args.seed))
     if args.shards > 1:
         # CPU dev: force host devices BEFORE any jax import/initialization
         # (hostdev is the one launch module that never imports jax).
@@ -295,6 +321,14 @@ def main(argv=None):
     inserted: list[int] = []
     results = []
     shed = 0
+    obs_server = None
+    if args.metrics_port is not None:
+        from repro.obs import ObsServer
+
+        obs_server = ObsServer(port=args.metrics_port,
+                               telemetry_fn=engine.telemetry)
+        print(f"observability: {obs_server.url}/metrics  /telemetry  /trace",
+              flush=True)
     try:
         return _serve(args, engine, mutable, reqs, results, inserted,
                       churn_rng, shed)
@@ -303,6 +337,14 @@ def main(argv=None):
         # (or leave the engine's drain worker running)
         if mutable is not None:
             mutable.close()
+        if obs_server is not None:
+            obs_server.close()
+        if args.trace_out:
+            from repro.obs import trace as obst
+
+            n = obst.default_tracer().dump_chrome(args.trace_out)
+            print(f"wrote {n} trace spans to {args.trace_out} "
+                  "(load in Perfetto or chrome://tracing)", flush=True)
 
 
 def _verify_recovery(mutable, seed):
@@ -339,8 +381,29 @@ def _verify_recovery(mutable, seed):
         # the overlap floor is a sanity check (replayed state is not
         # garbage), not a recall target: the two sides run different
         # clusterings, so approximate selection legitimately diverges
+        from repro.obs import metrics as obsm
+
+        snap = {k: v for k, v in sorted(obsm.snapshot().items())
+                if k.startswith(("taco_wal_", "taco_mutable_",
+                                 "taco_compaction_"))}
+        print("verify-recovery metric snapshot (WAL/mutable/compaction "
+              "state at failure):", flush=True)
+        for key, val in snap.items():
+            print(f"  {key} = {val}", flush=True)
         raise SystemExit("verify-recovery FAILED: recovered index does not "
                          "match the from-scratch oracle")
+
+
+def _stats_line(engine, wave):
+    """One-line periodic serving summary (``--stats-every``)."""
+    t = engine.telemetry()
+    return (f"  [wave {wave}] served {t['requests_served']} "
+            f"in {t['batches']} batches   "
+            f"p50 {t['latency_p50_s'] * 1e3:.2f} ms "
+            f"p99 {t['latency_p99_s'] * 1e3:.2f} ms   "
+            f"{t['queries_per_sec']:.0f} q/s   "
+            f"queue {t['queue_depth']} (peak {t['queue_depth_peak']})   "
+            f"cache hits {t['result_cache_hits']}")
 
 
 def _serve(args, engine, mutable, reqs, results, inserted, churn_rng, shed):
@@ -369,6 +432,20 @@ def _serve(args, engine, mutable, reqs, results, inserted, churn_rng, shed):
 
         threads = [threading.Thread(target=producer, args=(i,), daemon=True)
                    for i in range(n_p)]
+        stop_stats = threading.Event()
+        if args.stats_every:
+            # async serving has no caller-side waves; report every time the
+            # engine finishes another --stats-every waves' worth of requests
+            def stats_monitor():
+                reported = 0
+                while not stop_stats.wait(0.25):
+                    wave = engine.telemetry()["requests_served"] // args.pressure
+                    if wave >= reported + args.stats_every:
+                        reported = wave
+                        print(_stats_line(engine, wave), flush=True)
+
+            threading.Thread(target=stats_monitor, name="serve-ann-stats",
+                             daemon=True).start()
         for th in threads:
             th.start()
         if mutable is not None and args.churn:
@@ -381,12 +458,13 @@ def _serve(args, engine, mutable, reqs, results, inserted, churn_rng, shed):
                     handle.result(timeout=300.0)  # pool task, not this thread
         for th in threads:
             th.join()
+        stop_stats.set()
         for chunk in out:
             results.extend(chunk)
         shed = sum(shed_counts)
         engine.close()
     else:
-        for lo in range(0, len(reqs), args.pressure):
+        for wave, lo in enumerate(range(0, len(reqs), args.pressure), 1):
             if mutable is not None and args.churn:
                 # mixed workload: mutate between query waves, compact on
                 # policy
@@ -395,6 +473,8 @@ def _serve(args, engine, mutable, reqs, results, inserted, churn_rng, shed):
                 churn_wave(mutable, churn_rng, inserted, args.churn,
                            engine=engine)
             results.extend(engine.search(reqs[lo : lo + args.pressure]))
+            if args.stats_every and wave % args.stats_every == 0:
+                print(_stats_line(engine, wave), flush=True)
 
     t = engine.telemetry()
     print(f"served {len(results)} requests in {t['batches']} batches "

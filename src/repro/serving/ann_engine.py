@@ -100,8 +100,63 @@ from repro.ann.searcher import (
 )
 from repro.core.config import SCConfig
 from repro.core.taco import SCIndex
+from repro.obs import metrics as obsm
+from repro.obs import trace as obst
 from repro.serving.batching import ANN_BATCH_BUCKETS, bucket_size, pad_rows
 from repro.serving.scheduler import WorkerPool, get_shared_pool
+
+# Process-wide engine metric families (repro.obs registry). Module-level
+# handles: the registry is idempotent, increments are per-thread-sharded
+# (cheap under the engine lock), and telemetry()/bench/`/metrics` all
+# read the same numbers — the registry is the single source of truth for
+# stage timings (the O001 lint rule keeps it that way).
+_M_REQUESTS = obsm.counter(
+    "taco_engine_requests_total", "Requests resolved, by outcome",
+    labelnames=("outcome",),
+)
+_M_REQ_EXECUTED = _M_REQUESTS.labels(outcome="executed")
+_M_REQ_CACHE_HIT = _M_REQUESTS.labels(outcome="cache_hit")
+_M_REQ_SHED = _M_REQUESTS.labels(outcome="shed")
+_M_BATCHES = obsm.counter(
+    "taco_engine_batches_total", "Padded micro-batches executed"
+)
+_M_BATCHES_EARLY = obsm.counter(
+    "taco_engine_batches_closed_early_total",
+    "Batches a member's deadline closed before linger/full",
+)
+_M_DEGRADED = obsm.counter(
+    "taco_engine_degraded_admissions_total",
+    "Requests admitted with a degraded (scaled-down) re-rank budget",
+)
+_M_CACHE_ONLY = obsm.counter(
+    "taco_engine_cache_only_served_total",
+    "Over-watermark requests served purely from the result cache",
+)
+_M_DEADLINE_MISSES = obsm.counter(
+    "taco_engine_deadline_misses_total", "Results delivered past their SLO"
+)
+_M_SWAPS = obsm.counter(
+    "taco_engine_index_swaps_total", "Atomic index swaps on live engines"
+)
+_M_INVALIDATIONS = obsm.counter(
+    "taco_engine_cache_invalidations_total",
+    "Result-cache drops from mutations/compaction installs",
+)
+_M_QUEUE_DEPTH = obsm.gauge(
+    "taco_engine_queue_depth", "Requests waiting in the engine queue"
+)
+_M_REQ_LATENCY = obsm.histogram(
+    "taco_engine_request_latency_seconds",
+    "Per-request serve latency (batch wall time; 0 for cache hits)",
+)
+_M_QUEUE_WAIT = obsm.histogram(
+    "taco_engine_queue_wait_seconds",
+    "Submit-to-batch-formation wait per executed request",
+)
+_M_EXEC_SECONDS = obsm.histogram(
+    "taco_engine_batch_exec_seconds",
+    "Backend execution (kernel stage) wall time per batch",
+)
 
 
 class AdmissionError(RuntimeError):
@@ -231,6 +286,14 @@ class _Pending:
     t_submit: float  # monotonic
     deadline: float | None  # absolute monotonic, or None
     degraded: bool  # admission degraded this request to a lower beta
+    # Tracing (repro.obs.trace): the root span crosses from the submitting
+    # thread to the drain worker to the probe pool EXPLICITLY, by riding
+    # this record — no implicit thread-local context. NULL_SPAN when the
+    # request was not sampled.
+    span: object = obst.NULL_SPAN  # root "ann-request" span
+    qspan: object = obst.NULL_SPAN  # open "queue-wait" child
+    fspan: object = None  # "batch-form" child once taken into a batch
+    t_taken: float | None = None  # monotonic, first taken into a batch
 
 
 def _copied_arrays(r: AnnResult) -> dict:
@@ -404,6 +467,7 @@ class AnnServingEngine:
         admission_policy: str = "reject",
         degrade_beta_scale: float = 0.5,
         autotune_cache: str | None = None,
+        tracer: obst.Tracer | None = None,  # None = the process default
     ):
         self.index = index
         self.cfg = cfg
@@ -445,7 +509,14 @@ class AnnServingEngine:
         #: results later — and another caller's search() can no longer
         #: discard them.
         self._undelivered: OrderedDict[int, AnnFuture] = OrderedDict()
-        self._latencies: list[float] = []
+        # Per-request latencies live in a bounded log-bucketed histogram
+        # (NOT a list: a long-running serve must hold flat memory). This
+        # private instance backs the engine's own resettable telemetry()
+        # view; the same observations also land in the process registry.
+        self._lat_hist = obsm.Histogram(
+            "engine_request_latency_seconds", "per-engine telemetry view"
+        )
+        self._tracer = tracer
         self._served = 0
         self._executed = 0  # requests that reached the backend (not cache hits)
         self._batches = 0
@@ -602,6 +673,11 @@ class AnnServingEngine:
         if deadline_s is not None and not float(deadline_s) > 0.0:
             raise ValueError(f"deadline_s={deadline_s} must be > 0")
         now = time.monotonic()
+        # root span + open queue-wait child; NULL_SPAN when unsampled (the
+        # common case: every stage below is then an attribute no-op)
+        tracer = self._tracer if self._tracer is not None else obst.default_tracer()
+        span = tracer.start_trace("ann-request", k=request.k, priority=request.priority)
+        qspan = span.child("queue-wait")
         cache_hit: tuple[AnnFuture, AnnResult] | None = None
         with self._work:
             degraded = False
@@ -609,6 +685,7 @@ class AnnServingEngine:
                 if self.admission_policy == "degrade":
                     degraded = True
                     self._degraded += 1
+                    _M_DEGRADED.inc()
                 elif self.admission_policy == "cache_only":
                     hit = None
                     if self.result_cache_size > 0:
@@ -617,18 +694,23 @@ class AnnServingEngine:
                         )
                     if hit is None:
                         self._shed += 1
+                        _M_REQ_SHED.inc()
+                        span.finish(outcome="shed")
                         raise AdmissionError(
                             f"queue depth {len(self._queue)} >= "
                             f"{self.max_queue_depth} and no cached result "
                             f"(policy=cache_only)"
                         )
                     self._cache_only_served += 1
+                    _M_CACHE_ONLY.inc()
                     fut = AnnFuture(self._next_id)
                     self._next_id += 1
                     self._undelivered[fut.request_id] = fut
                     cache_hit = (fut, hit)
                 else:  # reject
                     self._shed += 1
+                    _M_REQ_SHED.inc()
+                    span.finish(outcome="shed")
                     raise AdmissionError(
                         f"queue depth {len(self._queue)} >= "
                         f"{self.max_queue_depth} (policy=reject)"
@@ -643,13 +725,18 @@ class AnnServingEngine:
                     t_submit=now,
                     deadline=None if deadline_s is None else now + float(deadline_s),
                     degraded=degraded,
+                    span=span,
+                    qspan=qspan,
                 ))
                 self._undelivered[fut.request_id] = fut
                 self._queue_peak = max(self._queue_peak, len(self._queue))
+                _M_QUEUE_DEPTH.set(len(self._queue))
                 self._work.notify_all()
         if cache_hit is not None:
             fut, hit = cache_hit
             fut._resolve(hit)  # outside the lock: callbacks are user code
+            qspan.finish()
+            span.finish(outcome="cache_only")
         return fut
 
     def pending(self) -> int:
@@ -709,6 +796,8 @@ class AnnServingEngine:
                     group_key, batch = self._take_group_locked()
             for p, r in resolved:
                 p.future._resolve(r)
+                p.qspan.finish()
+                p.span.finish(outcome="cache_hit")
             if batch is None:
                 return
             self._execute(group_key, batch)
@@ -732,10 +821,13 @@ class AnnServingEngine:
                     group_key, batch, early = self._form_batch_locked()
             for p, r in resolved:
                 p.future._resolve(r)
+                p.qspan.finish()
+                p.span.finish(outcome="cache_hit")
             if batch:
                 if early:
                     with self._lock:
                         self._early_closes += 1
+                    _M_BATCHES_EARLY.inc()
                 self._execute(group_key, batch)
 
     def _take_matching_locked(self, group_key, batch: list) -> None:
@@ -750,9 +842,15 @@ class AnnServingEngine:
                 and self._effective(p.req, p.degraded) == group_key
             ):
                 batch.append(p)
+                if p.t_taken is None:
+                    p.t_taken = time.monotonic()
+                    # stage transition: queue wait is over, batch forming
+                    p.qspan.finish()
+                    p.fspan = p.span.child("batch-form") if p.span else None
             else:
                 rest.append(p)
         self._queue = rest
+        _M_QUEUE_DEPTH.set(len(rest))
 
     def _pick_group_locked(self):
         """The next batch's (k, cfg): highest-priority oldest request."""
@@ -828,7 +926,9 @@ class AnnServingEngine:
         out = dataclasses.replace(hit, latency_s=0.0, cached=True,
                                   index_generation=self.index_generation,
                                   **_copied_arrays(hit))
-        self._latencies.append(0.0)
+        self._lat_hist.observe(0.0)
+        _M_REQ_LATENCY.observe(0.0)
+        _M_REQ_CACHE_HIT.inc()
         self._truncated += int(hit.truncated)
         self._served += 1
         return out
@@ -921,6 +1021,7 @@ class AnnServingEngine:
             self._shard_truncated = np.zeros(self.backend.shards, np.int64)
             self.index_generation += 1
             self._swaps += 1
+            _M_SWAPS.inc()
             self._result_cache.clear()
             return self.index_generation
 
@@ -933,6 +1034,7 @@ class AnnServingEngine:
         with self._lock:
             self.index_generation += 1
             self._invalidations += 1
+            _M_INVALIDATIONS.inc()
             self._result_cache.clear()
             return self.index_generation
 
@@ -943,34 +1045,37 @@ class AnnServingEngine:
         return self.backend.searcher.probe_corpus()
 
     def _probe_task(self, query: np.ndarray, served_ids: np.ndarray,
-                    k: int, generation: int) -> None:
+                    k: int, generation: int, span=obst.NULL_SPAN) -> None:
         """One recall probe (a WorkerPool task): re-answer a served request
         with exact kNN over the live corpus and record recall@k of what was
         actually served. Skipped (and counted skipped) when the generation
         went stale — a result must never be scored against a corpus it
-        wasn't computed on."""
-        if self.index_generation != generation:
-            with self._lock:
-                self._probe_skipped += 1
-                self.probe_thread_names.add(threading.current_thread().name)
-            return
-        corpus, ids = self._probe_corpus()
-        m = int(np.asarray(corpus).shape[0])
-        if m == 0:
-            return  # nothing live: recall undefined, skip the sample
-        kk = min(k, m)
-        diff = np.asarray(corpus, np.float32) - query[None, :]
-        dist = np.einsum("md,md->m", diff, diff)
-        exact = set(np.asarray(ids)[np.lexsort((ids, dist))[:kk]].tolist())
-        served = {int(i) for i in served_ids[:k] if i >= 0}
-        recall = len(served & exact) / kk
-        with self._lock:
-            self.probe_thread_names.add(threading.current_thread().name)
+        wasn't computed on. ``span`` is the originating request's root span
+        (explicit cross-thread propagation): the probe's span joins that
+        request's tree even though the request already resolved."""
+        with span.child("recall-probe"):
             if self.index_generation != generation:
-                self._probe_skipped += 1  # swapped while we scored
+                with self._lock:
+                    self._probe_skipped += 1
+                    self.probe_thread_names.add(threading.current_thread().name)
                 return
-            self._probe_recall_sum += recall
-            self._probe_count += 1
+            corpus, ids = self._probe_corpus()
+            m = int(np.asarray(corpus).shape[0])
+            if m == 0:
+                return  # nothing live: recall undefined, skip the sample
+            kk = min(k, m)
+            diff = np.asarray(corpus, np.float32) - query[None, :]
+            dist = np.einsum("md,md->m", diff, diff)
+            exact = set(np.asarray(ids)[np.lexsort((ids, dist))[:kk]].tolist())
+            served = {int(i) for i in served_ids[:k] if i >= 0}
+            recall = len(served & exact) / kk
+            with self._lock:
+                self.probe_thread_names.add(threading.current_thread().name)
+                if self.index_generation != generation:
+                    self._probe_skipped += 1  # swapped while we scored
+                    return
+                self._probe_recall_sum += recall
+                self._probe_count += 1
 
     def _flush_probes(self) -> None:
         """Join in-flight probe tasks so telemetry counts are consistent.
@@ -1001,14 +1106,28 @@ class AnnServingEngine:
         k, cfg = group_key
         queries = np.stack([np.asarray(p.req.query, np.float32) for p in batch])
         bucket = bucket_size(len(batch), self.buckets)
+        # batch formation is over for every member; the kernel stage spans
+        # start now, on this (the executing) thread
+        kspans = []
+        for p in batch:
+            if p.span:
+                if p.fspan is not None:
+                    p.fspan.finish()
+                    p.fspan = None
+                kspans.append(p.span.child("kernel", bucket=bucket, k=k))
         with self._exec_lock:
             generation = self.index_generation
-            t0 = time.perf_counter()
+            t0 = obsm.now()
             # noqa: B001 — deliberate: _exec_lock IS the batch-vs-swap
             # serialization point; dispatch must happen under it so a
             # swap_index() can never interleave with an in-flight batch.
             res = self.backend.run(bucket, k, cfg, pad_rows(queries, bucket))  # noqa: B001
-            dt = time.perf_counter() - t0
+            dt = obsm.now() - t0
+        for ks in kspans:
+            ks.finish()
+        _M_EXEC_SECONDS.observe(dt)
+        _M_BATCHES.inc()
+        _M_REQ_EXECUTED.inc(len(batch))
         now = time.monotonic()
         served: list = []
         with self._lock:
@@ -1037,7 +1156,10 @@ class AnnServingEngine:
                     self._cache_misses += 1
                     if fresh:
                         self._cache_store(p.req, group_key, result)
-                self._latencies.append(dt)
+                self._lat_hist.observe(dt)
+                _M_REQ_LATENCY.observe(dt)
+                if p.t_taken is not None:
+                    _M_QUEUE_WAIT.observe(p.t_taken - p.t_submit)
                 self._truncated += int(result.truncated)
                 self._served += 1
                 self._executed += 1
@@ -1047,6 +1169,7 @@ class AnnServingEngine:
                     self._shard_truncated += res.shard_truncated[i]
                 if p.deadline is not None and now > p.deadline:
                     self._deadline_misses += 1
+                    _M_DEADLINE_MISSES.inc()
                 if self.recall_probe_every > 0:
                     self._probe_tick += 1
                     if self._probe_tick % self.recall_probe_every == 0:
@@ -1057,10 +1180,12 @@ class AnnServingEngine:
                             k,
                             generation,
                             label="recall-probe",
+                            span=p.span,
                         ))
                 served.append((p, result))
         for p, result in served:  # outside the lock: callbacks are user code
             p.future._resolve(result)
+            p.span.finish(outcome="served", latency_s=result.latency_s)
 
     # --------------------------------------------------------- telemetry --
     def reset_telemetry(self) -> None:
@@ -1070,7 +1195,7 @@ class AnnServingEngine:
         if self.recall_probe_every > 0:
             self._flush_probes()  # in-flight samples land pre-reset
         with self._lock:
-            self._latencies = []
+            self._lat_hist.reset()
             self._served = 0
             self._executed = 0
             self._batches = 0
@@ -1098,7 +1223,6 @@ class AnnServingEngine:
         if self.recall_probe_every > 0:
             self._flush_probes()  # counts must cover everything served
         with self._lock:
-            lat = np.asarray(self._latencies, np.float64)
             per_bucket: dict[int, int] = {}
             for (bucket, _k, _cfg), c in self.compile_counts.items():
                 per_bucket[bucket] = per_bucket.get(bucket, 0) + c
@@ -1108,8 +1232,10 @@ class AnnServingEngine:
                 "requests_served": self._served,
                 "batches": self._batches,
                 "queries_per_sec": self._served / self._busy_s if self._busy_s else 0.0,
-                "latency_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
-                "latency_p99_s": float(np.percentile(lat, 99)) if lat.size else 0.0,
+                # back-compat keys, now a view over the bounded histogram
+                # (relative error <= obsm.RELATIVE_ERROR_BOUND, ~9%)
+                "latency_p50_s": self._lat_hist.percentile(50),
+                "latency_p99_s": self._lat_hist.percentile(99),
                 "truncation_rate": self._truncated / self._served if self._served else 0.0,
                 "compiles_total": sum(self.compile_counts.values()),
                 "compiles_per_bucket": per_bucket,

@@ -30,6 +30,27 @@ import threading
 import time
 from collections import deque
 
+from repro.obs import metrics as obsm
+
+# Process-wide pool metric families (repro.obs registry). Shared across
+# pools: an application's maintenance load is one bounded set of threads,
+# so the aggregate is the number an operator wants.
+_M_QUEUE_DEPTH = obsm.gauge(
+    "taco_pool_queue_depth", "Tasks waiting in the worker-pool queue"
+)
+_M_TASKS = obsm.counter(
+    "taco_pool_tasks_total", "Worker-pool tasks completed, by outcome",
+    labelnames=("outcome",),
+)
+_M_TASKS_OK = _M_TASKS.labels(outcome="ok")
+_M_TASKS_FAILED = _M_TASKS.labels(outcome="failed")
+_M_TASK_SECONDS = obsm.histogram(
+    "taco_pool_task_seconds", "Worker-pool task execution wall time"
+)
+_M_TASK_WAIT = obsm.histogram(
+    "taco_pool_task_wait_seconds", "Queue wait from submit to task start"
+)
+
 
 class WorkTask:
     """Handle to one submitted unit of work.
@@ -115,8 +136,8 @@ class WorkerPool:
         self.name = name
         self.workers = _default_workers() if workers is None else max(1, int(workers))
         self._cond = threading.Condition(threading.Lock())
-        # (task, fn, args, kwargs, coalesce_key-or-None)
-        self._tasks: deque[tuple[WorkTask, object, tuple, dict, object]] = deque()
+        # (task, fn, args, kwargs, coalesce_key-or-None, t_submit)
+        self._tasks: deque[tuple] = deque()
         self._threads: list[threading.Thread] = []
         self._services: list[threading.Thread] = []
         self._active = 0
@@ -133,7 +154,8 @@ class WorkerPool:
         with self._cond:
             if self._shutdown:
                 raise RuntimeError(f"WorkerPool {self.name!r} is shut down")
-            self._tasks.append((task, fn, args, kwargs, None))
+            self._tasks.append((task, fn, args, kwargs, None, obsm.now()))
+            _M_QUEUE_DEPTH.set(len(self._tasks))
             if len(self._threads) < self.workers:
                 t = threading.Thread(
                     target=self._worker,
@@ -162,7 +184,8 @@ class WorkerPool:
                 return queued
             task = WorkTask(label)
             self._coalesced[key] = task
-            self._tasks.append((task, fn, args, kwargs, key))
+            self._tasks.append((task, fn, args, kwargs, key, obsm.now()))
+            _M_QUEUE_DEPTH.set(len(self._tasks))
             if len(self._threads) < self.workers:
                 t = threading.Thread(
                     target=self._worker,
@@ -181,16 +204,21 @@ class WorkerPool:
                     self._cond.wait()
                 if self._shutdown and not self._tasks:
                     return
-                task, fn, args, kwargs, key = self._tasks.popleft()
+                task, fn, args, kwargs, key, t_submit = self._tasks.popleft()
                 if key is not None and self._coalesced.get(key) is task:
                     del self._coalesced[key]  # started: stop coalescing
                 self._active += 1
+                _M_QUEUE_DEPTH.set(len(self._tasks))
+            t0 = obsm.now()
+            _M_TASK_WAIT.observe(t0 - t_submit)
             try:
                 task._resolve(result=fn(*args, **kwargs))
                 ok = True
             except BaseException as e:  # surface via result(), keep the worker
                 task._resolve(exc=e)
                 ok = False
+            _M_TASK_SECONDS.observe(obsm.now() - t0)
+            (_M_TASKS_OK if ok else _M_TASKS_FAILED).inc()
             with self._cond:
                 self._active -= 1
                 self._completed += 1

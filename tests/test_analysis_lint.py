@@ -233,6 +233,70 @@ def test_w001_perf_counter_is_clean(tmp_path):
     assert run(tmp_path, src) == []
 
 
+# ------------------------------------------------------------------ O001 --
+def run_in_dir(tmp_path, source, subdir, name="snippet.py"):
+    d = tmp_path / subdir
+    d.mkdir(parents=True, exist_ok=True)
+    f = d / name
+    f.write_text(textwrap.dedent(source))
+    findings, _src = lint.lint_paths([str(f)])
+    return findings
+
+
+PERF_COUNTER_TIMING = """
+    import time
+
+    def f():
+        t0 = time.perf_counter()
+        return time.perf_counter() - t0
+    """
+
+
+def test_o001_perf_counter_in_serving_hot_path(tmp_path):
+    findings = run_in_dir(tmp_path, PERF_COUNTER_TIMING, "serving")
+    assert codes(findings) == ["O001", "O001"]
+
+
+def test_o001_perf_counter_in_ann_hot_path(tmp_path):
+    src = """
+    from time import perf_counter
+
+    def f():
+        return perf_counter()
+    """
+    findings = run_in_dir(tmp_path, src, "ann")
+    assert codes(findings) == ["O001"]
+
+
+def test_o001_outside_hot_path_is_clean(tmp_path):
+    # same snippet, non-hot-path directory: the helper modules themselves
+    # (repro/obs) and benchmarks may use perf_counter directly
+    assert run_in_dir(tmp_path, PERF_COUNTER_TIMING, "obs") == []
+
+
+def test_o001_obs_helpers_are_clean(tmp_path):
+    src = """
+    from repro.obs import metrics as obsm
+
+    def f(hist):
+        t0 = obsm.now()
+        with obsm.timed(hist):
+            pass
+        return obsm.now() - t0
+    """
+    assert run_in_dir(tmp_path, src, "serving") == []
+
+
+def test_o001_noqa(tmp_path):
+    src = """
+    import time
+
+    def f():
+        return time.perf_counter()  # noqa: O001 — calibrating obsm.now itself
+    """
+    assert run_in_dir(tmp_path, src, "serving") == []
+
+
 # ------------------------------------------------------------------ T001 --
 def test_t001_unjoined_nondaemon_thread(tmp_path):
     src = """

@@ -1,0 +1,335 @@
+"""The metrics registry analyzed: counter/gauge/histogram semantics,
+per-thread shard exactness under concurrency, the documented percentile
+error bound as a property sweep, Prometheus text rendering, the global
+enable switch, and the stdlib HTTP export surface.
+
+Engine-integration coverage (span parenting through the async pipeline,
+the 10k-request soak) lives in tests/test_obs_trace.py — this module
+stays jax-free so the registry invariants run in milliseconds.
+"""
+import json
+import math
+import threading
+import urllib.request
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.obs import ObsServer, metrics as obsm
+from repro.obs.metrics import (
+    NBUCKETS,
+    RELATIVE_ERROR_BOUND,
+    Histogram,
+    MetricsRegistry,
+    bucket_index,
+    bucket_mid,
+    bucket_upper,
+)
+
+
+# ----------------------------------------------------------- counters --
+def test_counter_inc_value_reset():
+    reg = MetricsRegistry()
+    c = reg.counter("t_requests_total", "help text")
+    assert c.value == 0.0
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    c.reset()
+    assert c.value == 0.0
+
+
+def test_counter_registration_is_idempotent():
+    reg = MetricsRegistry()
+    a = reg.counter("t_total")
+    b = reg.counter("t_total")
+    assert a is b
+    a.inc()
+    assert b.value == 1.0
+
+
+def test_family_kind_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("t_total")
+    with pytest.raises(ValueError, match="re-registered"):
+        reg.gauge("t_total")
+
+
+def test_labeled_family_children():
+    reg = MetricsRegistry()
+    fam = reg.counter("t_tasks_total", labelnames=("outcome",))
+    ok, failed = fam.labels(outcome="ok"), fam.labels(outcome="failed")
+    assert ok is not failed
+    assert fam.labels(outcome="ok") is ok
+    ok.inc(3)
+    failed.inc()
+    assert {lv: ch.value for lv, ch in fam.children()} == {
+        ("failed",): 1.0, ("ok",): 3.0,
+    }
+    with pytest.raises(ValueError, match="labels"):
+        fam.labels(nope="x")
+
+
+def test_gauge_last_write_wins():
+    reg = MetricsRegistry()
+    g = reg.gauge("t_depth")
+    g.set(7)
+    g.set(3)
+    assert g.value == 3.0
+    g.reset()
+    assert g.value == 0.0
+
+
+# --------------------------------------------------------- histograms --
+def test_bucket_geometry():
+    # boundaries are geometric with SUBDIV steps per octave; the midpoint
+    # sits strictly inside its bucket
+    for i in (0, 1, NBUCKETS // 2, NBUCKETS - 1):
+        lo = bucket_upper(i - 1) if i else 0.0
+        assert lo < bucket_mid(i) < bucket_upper(i)
+    assert bucket_index(1e-12) == 0  # below-range clamps to the edge
+    assert bucket_index(1e12) == NBUCKETS - 1
+
+
+def test_histogram_zero_latency_is_exact():
+    h = Histogram("t")
+    for _ in range(10):
+        h.observe(0.0)
+    h.observe(1.0)
+    assert h.count == 11
+    assert h.percentile(50) == 0.0  # rank falls among the exact zeros
+    assert h.percentile(99) > 0.0
+
+
+def test_histogram_percentile_error_bound_simple():
+    h = Histogram("t")
+    vals = [0.001 * (i + 1) for i in range(100)]
+    for v in vals:
+        h.observe(v)
+    vals.sort()
+    for q in (50, 90, 99):
+        want = vals[max(1, math.ceil(q / 100 * len(vals))) - 1]
+        got = h.percentile(q)
+        assert abs(got - want) <= RELATIVE_ERROR_BOUND * want
+
+
+def test_histogram_summary_and_sum():
+    h = Histogram("t")
+    for v in (0.5, 1.0, 2.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 3
+    assert s["sum"] == pytest.approx(3.5)
+    assert s["min"] == 0.5 and s["max"] == 2.0
+    assert s["p50"] == h.percentile(50)
+    assert h.percentile(0) <= s["p50"] <= s["p99"]
+
+
+def test_histogram_empty():
+    h = Histogram("t")
+    assert h.count == 0
+    assert h.percentile(50) == 0.0
+    assert h.summary()["p99"] == 0.0
+    assert h.cumulative_buckets() == []
+
+
+def test_histogram_reset():
+    h = Histogram("t")
+    h.observe(1.0)
+    h.reset()
+    assert h.count == 0
+    assert h.percentile(50) == 0.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(min_value=1e-6, max_value=100.0),
+                min_size=1, max_size=200))
+def test_histogram_percentile_property(values):
+    """Satellite acceptance: for any in-range sample, reported p50/p99
+    stay within the documented RELATIVE_ERROR_BOUND of the exact
+    rank-order statistic."""
+    h = Histogram("t")
+    for v in values:
+        h.observe(v)
+    ordered = sorted(values)
+    for q in (50, 99):
+        rank = max(1, math.ceil(q / 100 * len(ordered)))
+        want = ordered[rank - 1]
+        got = h.percentile(q)
+        assert abs(got - want) <= RELATIVE_ERROR_BOUND * want + 1e-12
+
+
+def test_timed_context_manager():
+    h = Histogram("t")
+    with obsm.timed(h):
+        pass
+    assert h.count == 1
+    assert h.sum >= 0.0
+
+
+# -------------------------------------------------------- concurrency --
+def test_counter_concurrent_exactness():
+    """Per-thread shards: N threads x M increments merge to exactly N*M
+    (no lost updates, no locks on the hot path)."""
+    reg = MetricsRegistry()
+    c = reg.counter("t_total")
+    n_threads, per = 8, 5000
+
+    def work():
+        for _ in range(per):
+            c.inc()
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == n_threads * per
+    assert len(c._shards) == n_threads
+
+
+def test_histogram_concurrent_exactness():
+    h = Histogram("t")
+    n_threads, per = 8, 2000
+
+    def work(i):
+        for j in range(per):
+            h.observe(0.001 * (i + 1))
+
+    threads = [threading.Thread(target=work, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert h.count == n_threads * per
+    assert len(h._shards) == n_threads  # fixed memory: one cell per thread
+
+
+# ------------------------------------------------------ enable switch --
+def test_set_enabled_kill_switch():
+    reg = MetricsRegistry()
+    c = reg.counter("t_total")
+    h = reg.histogram("t_seconds")
+    g = reg.gauge("t_depth")
+    try:
+        obsm.set_enabled(False)
+        assert not obsm.enabled()
+        c.inc()
+        h.observe(1.0)
+        g.set(5)
+        assert c.value == 0.0 and h.count == 0 and g.value == 0.0
+    finally:
+        obsm.set_enabled(True)
+    c.inc()
+    assert c.value == 1.0
+
+
+# ----------------------------------------------------------- exports --
+def _mk_registry():
+    reg = MetricsRegistry()
+    reg.counter("t_requests_total", "requests").inc(5)
+    fam = reg.counter("t_tasks_total", "tasks", labelnames=("outcome",))
+    fam.labels(outcome="ok").inc(2)
+    h = reg.histogram("t_latency_seconds", "latency")
+    for v in (0.0, 0.01, 0.02, 0.5):
+        h.observe(v)
+    reg.gauge("t_depth", "queue depth").set(3)
+    return reg
+
+
+def test_render_prometheus_text():
+    text = _mk_registry().render_prometheus()
+    lines = text.strip().splitlines()
+    assert "# TYPE t_requests_total counter" in lines
+    assert "t_requests_total 5" in lines
+    assert 't_tasks_total{outcome="ok"} 2' in lines
+    assert "# TYPE t_latency_seconds histogram" in lines
+    assert 't_latency_seconds_bucket{le="+Inf"} 4' in lines
+    assert "t_latency_seconds_count 4" in lines
+    assert "t_depth 3" in lines
+    # cumulative bucket counts are monotone and end at the total count
+    cums = [int(ln.rsplit(" ", 1)[1]) for ln in lines
+            if ln.startswith("t_latency_seconds_bucket")]
+    assert cums == sorted(cums) and cums[-1] == 4
+    # every sample line parses as "name{labels} value"
+    for ln in lines:
+        if not ln.startswith("#"):
+            name, val = ln.rsplit(" ", 1)
+            float(val)
+            assert name
+
+
+def test_label_escaping():
+    reg = MetricsRegistry()
+    fam = reg.counter("t_total", labelnames=("path",))
+    fam.labels(path='a"b\\c\nd').inc()
+    text = reg.render_prometheus()
+    assert '\\"' in text and "\\\\" in text and "\\n" in text
+
+
+def test_snapshot_shapes():
+    snap = _mk_registry().snapshot()
+    assert snap["t_requests_total"] == 5.0
+    assert snap["t_tasks_total{outcome=ok}"] == 2.0
+    assert snap["t_latency_seconds"]["count"] == 4
+    assert snap["t_depth"] == 3.0
+
+
+def test_default_registry_module_helpers():
+    c = obsm.counter("t_module_helper_total", "x")
+    c.inc()
+    assert obsm.snapshot()["t_module_helper_total"] >= 1.0
+    assert "t_module_helper_total" in obsm.render_prometheus()
+
+
+# -------------------------------------------------------- HTTP surface --
+def _get(url):
+    with urllib.request.urlopen(url, timeout=5.0) as r:
+        return r.status, r.headers.get("Content-Type"), r.read()
+
+
+def test_obs_server_endpoints():
+    from repro.obs import trace as obst
+
+    reg = _mk_registry()
+    tracer = obst.Tracer(sample_rate=1.0, capacity=64)
+    with tracer.start_trace("unit") as root:
+        root.child("stage").finish()
+    srv = ObsServer(port=0, registry=reg, tracer=tracer,
+                    telemetry_fn=lambda: {"queries_per_sec": 12.5})
+    try:
+        status, ctype, body = _get(srv.url + "/metrics")
+        assert status == 200 and ctype.startswith("text/plain")
+        assert "version=0.0.4" in ctype
+        assert b"t_requests_total 5" in body
+
+        status, ctype, body = _get(srv.url + "/telemetry")
+        assert status == 200 and ctype == "application/json"
+        doc = json.loads(body)
+        assert doc["queries_per_sec"] == 12.5
+        assert doc["metrics"]["t_requests_total"] == 5.0
+
+        status, ctype, body = _get(srv.url + "/trace")
+        doc = json.loads(body)
+        names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+        assert {"unit", "stage"} <= names
+
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(srv.url + "/nope")
+        assert ei.value.code == 404
+    finally:
+        srv.close()
+
+
+def test_obs_server_provider_error_returns_500():
+    def boom():
+        raise RuntimeError("engine gone")
+
+    srv = ObsServer(port=0, registry=MetricsRegistry(), telemetry_fn=boom)
+    try:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(srv.url + "/telemetry")
+        assert ei.value.code == 500
+    finally:
+        srv.close()

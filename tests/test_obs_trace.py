@@ -1,0 +1,232 @@
+"""Tracing analyzed: sampling, the bounded ring, Chrome export, and the
+acceptance gates that need a live engine — span parenting across the
+async submit -> drain-worker -> WorkerPool boundaries (every sampled
+request forms ONE rooted tree even though its stages run on different
+threads), WAL group-commit spans, and the 10k-request soak proving
+latency accounting is flat-memory (the unbounded per-request latency
+list is gone)."""
+import numpy as np
+import pytest
+
+from repro.core import build, taco_config
+from repro.obs import metrics as obsm
+from repro.obs import trace as obst
+from repro.obs.metrics import NBUCKETS
+from repro.serving import AnnRequest, AnnServingEngine
+
+D = 32
+K = 5
+
+
+@pytest.fixture(scope="module")
+def tiny_index():
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 30, (512, D)).astype(np.float32)
+    cfg = taco_config(n_subspaces=3, subspace_dim=8, n_clusters=64,
+                      kmeans_iters=3, alpha=0.1, beta=0.2, k=K)
+    return build(data, cfg), cfg, data
+
+
+# ------------------------------------------------------------ sampling --
+def test_sample_rate_zero_returns_null_span():
+    tr = obst.Tracer(sample_rate=0.0)
+    span = tr.start_trace("x")
+    assert span is obst.NULL_SPAN
+    assert not span  # falsy: call sites can skip optional work
+    assert span.child("y") is span  # children are itself
+    span.annotate(a=1)
+    span.finish()  # no-op, records nothing
+    assert tr.spans() == []
+    assert tr.dropped == 1
+
+
+def test_sample_rate_one_records():
+    tr = obst.Tracer(sample_rate=1.0)
+    with tr.start_trace("root") as root:
+        assert root  # truthy
+        root.child("stage").finish(ok=True)
+    spans = tr.spans()
+    assert [s["name"] for s in spans] == ["stage", "root"]
+    stage, rootrec = spans
+    assert stage["trace_id"] == rootrec["trace_id"]
+    assert stage["parent_id"] == rootrec["span_id"]
+    assert rootrec["parent_id"] is None
+    assert stage["attrs"] == {"ok": True}
+
+
+def test_sampling_is_seed_deterministic():
+    a = obst.Tracer(sample_rate=0.5, seed=42)
+    b = obst.Tracer(sample_rate=0.5, seed=42)
+    kept_a = [bool(a.start_trace("x")) for _ in range(64)]
+    kept_b = [bool(b.start_trace("x")) for _ in range(64)]
+    assert kept_a == kept_b
+    assert 0 < sum(kept_a) < 64  # genuinely probabilistic, not all/none
+
+
+def test_bad_sample_rate_raises():
+    with pytest.raises(ValueError):
+        obst.Tracer(sample_rate=1.5)
+
+
+def test_ring_is_bounded():
+    tr = obst.Tracer(sample_rate=1.0, capacity=8)
+    for i in range(50):
+        tr.start_trace("t", i=i).finish()
+    spans = tr.spans()
+    assert len(spans) == 8
+    assert [s["attrs"]["i"] for s in spans] == list(range(42, 50))
+    tr.clear()
+    assert tr.spans() == []
+
+
+# ------------------------------------------------------ chrome export --
+def test_to_chrome_structure(tmp_path):
+    tr = obst.Tracer(sample_rate=1.0)
+    with tr.start_trace("root"):
+        pass
+    doc = tr.to_chrome()
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    ms = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert len(xs) == 1 and xs[0]["name"] == "root"
+    for field in ("ts", "dur", "pid", "tid", "args"):
+        assert field in xs[0]
+    assert ms and ms[0]["name"] == "thread_name"
+    out = tmp_path / "trace.json"
+    assert tr.dump_chrome(str(out)) == 1
+    assert out.exists()
+
+
+def test_set_default_tracer_roundtrip():
+    mine = obst.Tracer(sample_rate=1.0)
+    prev = obst.set_default_tracer(mine)
+    try:
+        assert obst.default_tracer() is mine
+    finally:
+        obst.set_default_tracer(prev)
+    assert obst.default_tracer() is prev
+
+
+# ------------------------------------- async pipeline span parenting --
+def test_async_request_spans_form_one_rooted_tree(tiny_index):
+    """Satellite acceptance: a traced request crossing submit() ->
+    AnnFuture -> drain worker -> WorkerPool recall probe still yields
+    ONE rooted span tree — propagation is explicit (the span rides the
+    pending record / task kwargs), not thread-local."""
+    index, cfg, _data = tiny_index
+    tracer = obst.Tracer(sample_rate=1.0, capacity=4096)
+    engine = AnnServingEngine(index, cfg, async_mode=True, tracer=tracer,
+                              recall_probe_every=2, max_batch=8)
+    rng = np.random.default_rng(1)
+    try:
+        futures = [
+            engine.submit(AnnRequest(
+                rng.integers(0, 30, D).astype(np.float32), k=K))
+            for _ in range(24)
+        ]
+        for f in futures:
+            f.result(timeout=60.0)
+    finally:
+        engine.close()
+    # probes are pool tasks; give them a beat to finish their spans
+    from repro.serving.scheduler import get_shared_pool
+
+    get_shared_pool().join(timeout=30.0)
+
+    spans = tracer.spans()
+    names = {s["name"] for s in spans}
+    assert {"ann-request", "queue-wait", "batch-form", "kernel"} <= names
+    assert "recall-probe" in names
+
+    by_trace: dict[int, list[dict]] = {}
+    for s in spans:
+        by_trace.setdefault(s["trace_id"], []).append(s)
+    roots = [s for s in spans
+             if s["parent_id"] is None and s["name"] == "ann-request"]
+    assert len(roots) == 24
+    for tid, group in by_trace.items():
+        ids = {s["span_id"] for s in group}
+        n_roots = sum(1 for s in group if s["parent_id"] is None)
+        assert n_roots == 1, f"trace {tid} has {n_roots} roots"
+        for s in group:
+            if s["parent_id"] is not None:
+                assert s["parent_id"] in ids, (
+                    f"orphan span {s['name']} in trace {tid}"
+                )
+    # the tree genuinely crossed threads: submitters, the drain worker
+    # and the probe pool all contributed spans
+    assert len({s["tid"] for s in spans}) >= 2
+
+
+def test_wal_group_commit_spans(tmp_path, tiny_index):
+    """Durability path: WAL flushes trace as their own roots with an
+    fsync child; mutations trace wal-append under the insert span."""
+    _index, cfg, data = tiny_index
+    from repro.ann import MutableAnnIndex
+
+    tracer = obst.Tracer(sample_rate=1.0)
+    prev = obst.set_default_tracer(tracer)
+    try:
+        from repro.ann import AnnIndex
+
+        m = MutableAnnIndex(
+            AnnIndex.build(data[:256], cfg),
+            wal_dir=str(tmp_path / "wal"), durability="sync",
+        )
+        rng = np.random.default_rng(2)
+        m.insert(rng.integers(0, 30, (4, D)).astype(np.float32))
+        m.delete([0, 1])
+        m.close()
+    finally:
+        obst.set_default_tracer(prev)
+    spans = tracer.spans()
+    names = {s["name"] for s in spans}
+    assert {"insert", "wal-append", "wal-commit", "wal-flush",
+            "fsync"} <= names
+    flushes = [s for s in spans if s["name"] == "wal-flush"]
+    fsyncs = [s for s in spans if s["name"] == "fsync"]
+    assert flushes and fsyncs
+    flush_ids = {s["span_id"] for s in flushes}
+    assert all(s["parent_id"] in flush_ids for s in fsyncs)
+
+
+# ------------------------------------------------------------- soak --
+def test_latency_accounting_is_flat_memory_over_10k_requests(tiny_index):
+    """Satellite acceptance: the engine used to append every latency to
+    an unbounded list; 10k requests must now leave only fixed-size
+    histogram shards behind (and telemetry percentiles keep working)."""
+    index, cfg, _data = tiny_index
+    engine = AnnServingEngine(index, cfg, result_cache_size=8, max_batch=8)
+    rng = np.random.default_rng(3)
+    q = rng.integers(0, 30, D).astype(np.float32)
+    reqs = [AnnRequest(q, k=K)] * 100
+    try:
+        for _ in range(100):  # 10_000 requests, cache-hit dominated
+            engine.search(reqs)
+        assert not hasattr(engine, "_latencies")
+        # bounded accounting: one fixed-size shard per observing thread
+        shards = engine._lat_hist._shards
+        assert len(shards) <= 4
+        assert all(len(sh.counts) == NBUCKETS for sh in shards)
+        t = engine.telemetry()
+        assert t["requests_served"] == 10_000
+        assert 0.0 <= t["latency_p50_s"] <= t["latency_p99_s"]
+    finally:
+        engine.close()
+
+
+def test_cache_hit_latency_reports_exact_zero(tiny_index):
+    """The bounded histogram must not cost the old behavior: pure
+    cache-hit traffic reported p50 == 0.0 exactly (zeros are counted
+    outside the log buckets), so it still does."""
+    index, cfg, _data = tiny_index
+    engine = AnnServingEngine(index, cfg, result_cache_size=8)
+    rng = np.random.default_rng(4)
+    q = rng.integers(0, 30, D).astype(np.float32)
+    try:
+        engine.search([AnnRequest(q, k=K)])  # miss: executes
+        engine.reset_telemetry()
+        for _ in range(50):
+            engine.search([AnnRequest(q, k=K)])  # all hits
+        assert engine.telemetry()["latency_p50_s"] == 0.0
+    finally:
+        engine.close()
